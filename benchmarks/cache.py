@@ -1,0 +1,33 @@
+"""Fig. 10 reproduction: local database cache capacity vs communication.
+
+Remote (cache-miss) queries and hit rate as the cache capacity grows,
+relative to the data graph size."""
+
+from __future__ import annotations
+
+from repro.core.pattern import get_pattern
+from repro.core.plangen import generate_best_plan
+from repro.core.ref_engine import GraphDB, RefEngine
+from repro.graph.generate import powerlaw
+
+from .common import Table
+
+
+def run() -> Table:
+    g = powerlaw(400, 4, seed=2)
+    t = Table("Fig. 10: DB cache capacity vs remote queries",
+              ["pattern", "capacity %", "remote rows", "hit rate %"])
+    for pname in ("q2", "q4"):
+        p = get_pattern(pname)
+        plan = generate_best_plan(p, g.stats())
+        for frac in (0.01, 0.05, 0.2, 1.0):
+            db = GraphDB(g, cache_capacity=max(1, int(g.n * frac)))
+            eng = RefEngine(plan, p, g, db=db)
+            eng.run()
+            t.add(pname, f"{frac * 100:.0f}", db.remote_queries,
+                  f"{db.hit_rate * 100:.1f}")
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

@@ -1,0 +1,33 @@
+"""Shared benchmark helpers: timing + table output."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Sequence
+
+
+def timeit(fn: Callable, repeat: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat
+
+
+class Table:
+    def __init__(self, title: str, columns: Sequence[str]):
+        self.title = title
+        self.columns = list(columns)
+        self.rows: List[list] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def show(self) -> None:
+        print(f"\n## {self.title}")
+        widths = [max(len(str(c)), *(len(str(r[i])) for r in self.rows))
+                  if self.rows else len(str(c))
+                  for i, c in enumerate(self.columns)]
+        print("  ".join(str(c).ljust(w)
+                        for c, w in zip(self.columns, widths)))
+        for r in self.rows:
+            print("  ".join(str(x).ljust(w) for x, w in zip(r, widths)))

@@ -1,0 +1,78 @@
+"""Table 4 reproduction: best-execution-plan search efficiency.
+
+Random connected ER patterns per vertex count n; report the proportion of
+matching orders surviving the two pruning techniques and the wall time of
+best-plan generation (BENU and S-BENU)."""
+
+from __future__ import annotations
+
+import itertools
+import math
+import time
+
+import numpy as np
+
+from repro.core.estimate import GraphStats
+from repro.core.pattern import Pattern
+from repro.core.plangen import generate_best_plan, search_matching_orders
+from repro.core.sbenu import generate_best_sbenu_plans
+
+from .common import Table
+
+
+def random_connected(n: int, extra: int, rng, directed=False) -> Pattern:
+    perm = rng.permutation(n)
+    edges = {(min(int(perm[i]), int(perm[i + 1])),
+              max(int(perm[i]), int(perm[i + 1])))
+             for i in range(n - 1)}
+    all_e = [e for e in itertools.combinations(range(n), 2)
+             if e not in edges]
+    if all_e and extra:
+        idx = rng.choice(len(all_e), size=min(extra, len(all_e)),
+                         replace=False)
+        edges |= {all_e[i] for i in idx}
+    if directed:
+        es = []
+        for a, b in sorted(edges):
+            es.append((a, b) if rng.random() < 0.5 else (b, a))
+        return Pattern(n, tuple(es), directed=True, name=f"er{n}")
+    return Pattern(n, tuple(sorted(edges)), name=f"er{n}")
+
+
+def run(n_patterns: int = 8, n_range=(4, 5, 6, 7)) -> Table:
+    stats = GraphStats(1_000_000, 10_000_000, delta_edges=1000)
+    t = Table("Table 4: best execution plan search",
+              ["n", "BENU prop %", "BENU time (s)",
+               "S-BENU prop %", "S-BENU time (s)"])
+    rng = np.random.default_rng(0)
+    for n in n_range:
+        props_b, times_b, props_s, times_s = [], [], [], []
+        for i in range(n_patterns):
+            p = random_connected(n, extra=int(rng.integers(0, n)), rng=rng)
+            t0 = time.perf_counter()
+            sr = search_matching_orders(p, stats)
+            generate_best_plan(p, stats)
+            times_b.append(time.perf_counter() - t0)
+            props_b.append(100.0 * sr.orders_explored / sr.orders_total)
+            dp = random_connected(n, extra=int(rng.integers(0, n)),
+                                  rng=rng, directed=True)
+            t0 = time.perf_counter()
+            generate_best_sbenu_plans(dp, stats)
+            times_s.append(time.perf_counter() - t0)
+            # proportion across all delta plans
+            tot = expl = 0
+            from repro.core.sbenu import incremental_patterns
+            for ip in incremental_patterns(dp):
+                sr2 = search_matching_orders(
+                    dp, stats, fixed_prefix=(ip.delta_src, ip.delta_dst),
+                    delta_edge=ip.delta_edge, se_classes=ip.se_classes())
+                tot += sr2.orders_total
+                expl += sr2.orders_explored
+            props_s.append(100.0 * expl / max(tot, 1))
+        t.add(n, f"{np.mean(props_b):.1f}", f"{np.mean(times_b):.3f}",
+              f"{np.mean(props_s):.1f}", f"{np.mean(times_s):.3f}")
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

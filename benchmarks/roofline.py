@@ -1,0 +1,50 @@
+"""§Roofline table: reads the dry-run JSONs and prints the three terms per
+(arch x shape x mesh), the dominant bottleneck, and useful-FLOP ratios."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Table
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(result_dir: str = None) -> Table:
+    dirs = ([result_dir] if result_dir else
+            [os.path.join(ROOT, "results", d)
+             for d in ("dryrun", "dryrun_final_multipod", "dryrun_opt",
+                       "dryrun_opt2")])
+    t = Table("Roofline terms per cell (per-chip seconds; v5e constants)",
+              ["cell", "mesh", "variant", "mem GiB/dev", "compute ms",
+               "memory ms", "collective ms", "dominant", "useful-FLOP %"])
+    any_files = False
+    for d in dirs:
+        variant = ("optimized" if "opt" in os.path.basename(d)
+                   else "baseline")
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            any_files = True
+            with open(f) as fh:
+                r = json.load(fh)
+            ro = r["roofline"]
+            t.add(f"{r['arch']}:{r['shape']}",
+                  "2pod" if "pod,data" in r["mesh"] else "1pod",
+                  variant if variant == "baseline"
+                  else f"opt:{r.get('sharding_mode', '-')}",
+                  f"{r['memory_analysis']['peak_bytes_per_device'] / 2**30:.2f}",
+                  f"{ro['compute_s'] * 1e3:.2f}",
+                  f"{ro['memory_s'] * 1e3:.1f}",
+                  f"{ro['collective_s'] * 1e3:.2f}",
+                  ro["dominant"],
+                  f"{ro['useful_flops_ratio'] * 100:.0f}"
+                  if ro["useful_flops_ratio"] else "-")
+    if not any_files:
+        print(f"(no dry-run results under {dirs}; run "
+              "`python -m repro.launch.dryrun --all` first)")
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

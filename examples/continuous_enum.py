@@ -1,0 +1,34 @@
+"""Continuous subgraph enumeration with S-BENU (paper §5).
+
+Streams batch updates over a dynamic directed graph and reports the
+appearing/disappearing matches of a directed pattern at each time step,
+validating each step against the brute-force snapshot diff.
+
+    PYTHONPATH=src python examples/continuous_enum.py
+"""
+
+from repro.core.estimate import GraphStats
+from repro.core.pattern import get_pattern
+from repro.core.sbenu import (generate_best_sbenu_plans, run_timestep,
+                              snapshot_diff_oracle)
+from repro.graph.dynamic import SnapshotStore
+from repro.graph.generate import edge_stream
+
+p = get_pattern("q3'")        # directed triangle + 2-path chord
+g0, batches = edge_stream(n=150, m_init=900, steps=5, batch=60, seed=1)
+store = SnapshotStore(g0)
+
+plans = generate_best_sbenu_plans(
+    p, GraphStats(150, 900, delta_edges=60))
+print(f"{p.name}: {len(plans)} incremental execution plans "
+      f"(one per pattern edge)\n")
+print("plan for the first incremental pattern graph dP_1:")
+print(plans[0].pretty())
+
+print("\nstep |  dR+  |  dR-  | DBQ queries")
+for t, batch in enumerate(batches, 1):
+    want = snapshot_diff_oracle(p, store, batch)
+    dp, dm, ctr = run_timestep(p, plans, store, batch)
+    assert (dp, dm) == want
+    print(f"{t:4d} | {len(dp):5d} | {len(dm):5d} | {ctr.dbq}")
+print("\nall steps validated against the snapshot-diff oracle")

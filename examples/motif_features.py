@@ -1,0 +1,58 @@
+"""BENU as a motif-count feature extractor for a GNN (substrate crossover).
+
+Counts per-vertex triangle/square participation with BENU (collecting
+matches, not just counts), attaches them as node features, and trains the
+assigned GIN architecture on a synthetic task where motif counts carry the
+label signal — the point where the paper's technique feeds the GNN stack.
+
+    PYTHONPATH=src python examples/motif_features.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine_jax import enumerate_graph
+from repro.core.pattern import get_pattern
+from repro.core.plangen import generate_best_plan
+from repro.graph.batch import GraphBatch
+from repro.graph.generate import powerlaw
+from repro.graph.storage import edge_index_from_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.train.loop import TrainLoopConfig, run_training
+from repro.train.optimizer import AdamWConfig
+
+g = powerlaw(300, 4, seed=7)
+
+# --- per-vertex motif counts via BENU (matches collected) ---------------
+feats = np.zeros((g.n, 2), np.float32)
+for j, pname in enumerate(("triangle", "square")):
+    p = get_pattern(pname)
+    plan = generate_best_plan(p, g.stats())
+    res = enumerate_graph(plan, g, batch=64, collect_matches=True)
+    for match in res["matches"]:
+        for v in match:
+            feats[v, j] += 1.0
+print(f"motif features: triangles total={int(feats[:, 0].sum())}, "
+      f"squares total={int(feats[:, 1].sum())}")
+feats = np.log1p(feats)
+
+# --- labels derived from motif participation (learnable signal) ---------
+labels = (feats[:, 0] > np.median(feats[:, 0])).astype(np.int32)
+
+ei = edge_index_from_graph(g)
+batch = GraphBatch(
+    x=feats, edge_src=ei[0], edge_dst=ei[1], labels=labels, n_nodes=g.n,
+    node_mask=np.ones(g.n, bool), loss_mask=np.ones(g.n, bool)).as_arrays()
+
+cfg = GNNConfig("gin-motif", "gin", n_layers=3, d_hidden=32, d_feat=2,
+                n_out=2)
+hist = run_training(
+    lambda p_, b: gnn_loss(p_, b, cfg),
+    lambda: init_gnn_params(jax.random.PRNGKey(0), cfg),
+    lambda step: batch,
+    AdamWConfig(lr=3e-3, warmup_steps=5, decay_steps=100),
+    TrainLoopConfig(steps=100, ckpt_every=1000, log_every=25))
+print(f"GIN on BENU motif features: loss {hist['loss'][0]:.3f} -> "
+      f"{hist['loss'][-1]:.3f}")
+assert hist["loss"][-1] < hist["loss"][0]

@@ -1,0 +1,35 @@
+"""bst [recsys] — Behavior Sequence Transformer, arXiv:1905.06874 (paper).
+
+embed_dim=32 seq_len=20 n_blocks=1 n_heads=8 mlp=1024-512-256
+interaction=transformer-seq; item table 10^6 rows (row-sharded).
+"""
+
+import jax.numpy as jnp
+
+from ..models.bst import BSTConfig
+from .base import ArchSpec, ShapeSpec, recsys_shapes
+
+CONFIG = BSTConfig(
+    name="bst", n_items=1_000_000, n_user_feats=100_000, user_feat_len=32,
+    embed_dim=32, seq_len=20, n_blocks=1, n_heads=8,
+    mlp_sizes=(1024, 512, 256), dtype=jnp.float32)
+
+
+def _smoke() -> ArchSpec:
+    cfg = BSTConfig(name="bst-smoke", n_items=1000, n_user_feats=500,
+                    user_feat_len=8, embed_dim=32, seq_len=20, n_blocks=1,
+                    n_heads=8, mlp_sizes=(64, 32))
+    return ArchSpec(
+        name="bst/smoke", family="recsys", model_cfg=cfg,
+        shapes={"train": ShapeSpec("train", "rec_train", {"batch": 16}),
+                "retr": ShapeSpec("retr", "rec_retrieval",
+                                  {"batch": 1, "n_candidates": 512})})
+
+
+SPEC = ArchSpec(
+    name="bst", family="recsys", model_cfg=CONFIG,
+    shapes=recsys_shapes(), source="arXiv:1905.06874; paper",
+    applicability=("substrate reuse: the 10^6-row embedding table is "
+                   "row-sharded exactly like the BENU DistributedRowStore; "
+                   "EmbeddingBag = take + segment_sum per the taxonomy"),
+    smoke_builder=_smoke)

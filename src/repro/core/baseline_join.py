@@ -1,0 +1,128 @@
+"""BFS-style distributed join baseline (the paper's competitor family).
+
+Left-deep edge join (TwinTwig/SEED/CBF all specialize this skeleton): grow
+partial-match tables one pattern edge at a time; every join step in a
+distributed dataflow engine must SHUFFLE the partial-match table across the
+cluster (hash repartition on the join key). We execute the join in numpy
+and *meter* that shuffle: ``bytes_shuffled`` accumulates the byte size of
+every intermediate table — the quantity BENU's on-demand design avoids
+(Tables 5-6's communication column).
+
+The join is exact (validated against brute force / BENU counts in tests),
+so benchmarks/vs_join.py compares both wall time and communication volume
+on the same inputs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..graph.storage import Graph
+from .pattern import Pattern
+from .symmetry import symmetry_breaking_constraints
+
+
+@dataclass
+class JoinStats:
+    matches: int
+    bytes_shuffled: int
+    max_intermediate_rows: int
+    steps: List[Tuple[str, int]]          # (edge, rows after join)
+
+
+def _edge_join_order(pattern: Pattern) -> List[Tuple[int, int]]:
+    """Order pattern edges so each one shares a vertex with the prefix."""
+    edges = list(pattern.undirected_edges)
+    # start from the highest-degree edge (most selective joins first)
+    edges.sort(key=lambda e: -(pattern.degree(e[0]) + pattern.degree(e[1])))
+    out = [edges.pop(0)]
+    placed = set(out[0])
+    while edges:
+        for i, e in enumerate(edges):
+            if e[0] in placed or e[1] in placed:
+                out.append(edges.pop(i))
+                placed.update(e)
+                break
+        else:                              # disconnected remainder
+            out.append(edges.pop(0))
+            placed.update(out[-1])
+    return out
+
+
+def enumerate_join(pattern: Pattern, graph: Graph,
+                   constraints: Optional[Sequence[Tuple[int, int]]] = None
+                   ) -> JoinStats:
+    if constraints is None:
+        constraints = symmetry_breaking_constraints(pattern)
+    cons = list(constraints)
+    n = graph.n
+    # CSR adjacency
+    indptr = np.zeros(n + 1, np.int64)
+    for v in range(n):
+        indptr[v + 1] = indptr[v] + len(graph.adj[v])
+    nbrs = np.concatenate([graph.adj[v] for v in range(n)]) \
+        if n else np.zeros(0, np.int64)
+    deg = graph.deg
+    edge_keys = set()
+    for v in range(n):
+        for w in graph.adj[v]:
+            edge_keys.add(v * n + int(w))
+    edge_key_arr = np.fromiter(edge_keys, dtype=np.int64,
+                               count=len(edge_keys))
+
+    order = _edge_join_order(pattern)
+    cols: Dict[int, int] = {}              # pattern vertex -> column index
+    pm = np.zeros((0, 0), np.int64)
+    stats = JoinStats(matches=0, bytes_shuffled=0,
+                      max_intermediate_rows=0, steps=[])
+
+    def apply_constraints(pm: np.ndarray, newly: int) -> np.ndarray:
+        keep = np.ones(len(pm), bool)
+        cn = cols[newly]
+        for a, b in cons:
+            if a == newly and b in cols:
+                keep &= pm[:, cn] < pm[:, cols[b]]
+            elif b == newly and a in cols:
+                keep &= pm[:, cols[a]] < pm[:, cn]
+        # injectivity vs all mapped vertices
+        for u, cu in cols.items():
+            if u != newly:
+                keep &= pm[:, cu] != pm[:, cn]
+        return pm[keep]
+
+    first = True
+    for (a, b) in order:
+        if first:
+            src = np.repeat(np.arange(n, dtype=np.int64), deg)
+            pm = np.stack([src, nbrs], axis=1)     # both directions
+            cols = {a: 0, b: 1}
+            pm = apply_constraints(pm, b)
+            pm = apply_constraints(pm, a)
+            first = False
+        elif a in cols and b in cols:
+            keys = pm[:, cols[a]] * n + pm[:, cols[b]]
+            pm = pm[np.isin(keys, edge_key_arr)]
+        else:
+            have, new = (a, b) if a in cols else (b, a)
+            hv = pm[:, cols[have]]
+            counts = deg[hv]
+            rep = np.repeat(np.arange(len(pm)), counts)
+            starts = indptr[hv]
+            # neighbor expansion: offsets within each row's adjacency
+            total = int(counts.sum())
+            offs = np.arange(total) - np.repeat(
+                np.cumsum(counts) - counts, counts)
+            new_vals = nbrs[np.repeat(starts, counts) + offs]
+            pm = np.concatenate([pm[rep], new_vals[:, None]], axis=1)
+            cols = dict(cols)
+            cols[new] = pm.shape[1] - 1
+            pm = apply_constraints(pm, new)
+        stats.bytes_shuffled += pm.nbytes      # hash repartition per join
+        stats.max_intermediate_rows = max(stats.max_intermediate_rows,
+                                          len(pm))
+        stats.steps.append((f"({a},{b})", len(pm)))
+    stats.matches = len(pm)
+    return stats

@@ -1,0 +1,240 @@
+"""Distributed BENU: shard_map SPMD execution over a device mesh.
+
+The paper's deployment (Fig. 7) is: data graph in a distributed KV store;
+local search tasks fanned out over workers; tasks query the store on demand.
+The TPU mapping:
+
+    worker machine      -> mesh device (one shard of the enumeration axis)
+    HBase region        -> block of DistributedRowStore rows in device HBM
+    task queue          -> start-vertex range owned by the shard
+    on-demand DBQ       -> batched all_to_all request/response
+                           (see distributed/rowstore.py)
+    LRU DB cache        -> per-level id dedup + replicated hot rows
+    task splitting      -> fixed frontier capacities + overflow retries
+    skew / stragglers   -> opt-in frontier **rebalancing**: after each ENU
+                           the compacted child frontier is striped
+                           round-robin over the axis with one all_to_all —
+                           per-device load equalizes to ±S rows. The bytes
+                           moved are bounded by cap x row-width, exactly the
+                           paper's bounded subtask shuffle (§6.3), never
+                           proportional to total matches.
+
+All devices run the *same static instruction schedule* (lockstep SPMD), so
+collectives are trivially congruent — there is no data-dependent control
+flow anywhere in the compiled program.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..distributed.rowstore import (RowStoreSpec, build_row_shards,
+                                    make_distributed_fetch)
+from ..graph.storage import Graph
+from .engine_jax import build_enumerator, check_jit_supported, default_caps
+from .instructions import ENU, Plan
+
+
+def enumeration_mesh(axis: str = "shard",
+                     devices: Optional[Sequence] = None) -> Mesh:
+    """Flat 1-D mesh over all (or given) devices for the enumeration axis."""
+    devs = np.array(devices if devices is not None else jax.devices())
+    return Mesh(devs, (axis,))
+
+
+@dataclass
+class DistEnumStats:
+    count: int
+    per_shard_counts: np.ndarray
+    per_shard_level_sizes: np.ndarray      # [levels, S]
+    cold_rows_fetched: int                 # distinct rows that crossed wire
+    request_drops: int
+    overflow: int
+    chunks_retried: int
+
+
+def _rebalancer(axis: str, n_shards: int):
+    """Round-robin stripe exchange: child i -> shard (i mod S)."""
+
+    def post_expand(env: Dict, valid: jax.Array):
+        cap = valid.shape[0]
+        assert cap % n_shards == 0, "cap must be divisible by mesh size"
+        w = cap // n_shards
+
+        def shuf(x: jax.Array) -> jax.Array:
+            # true round-robin: child i -> shard (i mod S); a compacted
+            # (valid-first) frontier therefore spreads evenly
+            xs = x.reshape((w, n_shards) + x.shape[1:]).swapaxes(0, 1)
+            xs = jax.lax.all_to_all(xs, axis, split_axis=0, concat_axis=0,
+                                    tiled=False)
+            return xs.swapaxes(0, 1).reshape((cap,) + x.shape[1:])
+
+        env2 = {k: shuf(v) for k, v in env.items()}
+        return env2, shuf(valid)
+
+    return post_expand
+
+
+def build_distributed_step(plan: Plan,
+                           spec: RowStoreSpec,
+                           mesh: Mesh,
+                           axis: str,
+                           caps: Sequence[int],
+                           req_cap: int,
+                           rebalance: bool = False,
+                           intersect_impl: str = "auto",
+                           compaction: str = "cumsum"):
+    """shard_map'd enumeration step.
+
+    Returns ``step(shards, hot_rows, starts, starts_valid[, uni]) ->
+    (counts[S], overflow[S], cold[S], drops[S], levels[L, S])``.
+
+    ``shards``: int32[S, rps, D] sharded over ``axis``; ``hot_rows``
+    replicated; ``starts``/``starts_valid``: [S*B] sharded. This function is
+    what the multi-pod dry-run lowers for the paper's own technique.
+    """
+    has_universe = check_jit_supported(plan)
+    S = spec.n_shards
+    n_levels = sum(1 for ins in plan.instrs if ins.op == ENU)
+
+    def local_fn(shards, hot_rows, starts, starts_valid, uni=None):
+        local_shard = shards[0]            # [rps, D]
+        dist_fetch = make_distributed_fetch(spec, axis, req_cap)
+        fetch_stats: List[Tuple[jax.Array, jax.Array]] = []
+
+        def fetch(ids: jax.Array) -> jax.Array:
+            rows, n_cold, drops = dist_fetch(ids, local_shard, hot_rows)
+            fetch_stats.append((n_cold, drops))
+            return rows
+
+        post = _rebalancer(axis, S) if rebalance else None
+        run = build_enumerator(plan, spec.n, caps, fetch,
+                               intersect_impl=intersect_impl,
+                               post_expand=post, compaction=compaction)
+        if has_universe:
+            res = run(starts, starts_valid, uni)
+        else:
+            res = run(starts, starts_valid)
+        cold = sum((c for c, _ in fetch_stats), jnp.zeros((), jnp.int32))
+        drops = sum((d for _, d in fetch_stats), jnp.zeros((), jnp.int32))
+        levels = (jnp.stack(res.level_sizes)[:, None]
+                  if res.level_sizes else jnp.zeros((0, 1), jnp.int32))
+        return (res.count[None], res.overflow[None], cold[None],
+                drops[None], levels)
+
+    in_specs = [P(axis, None, None), P(None, None), P(axis), P(axis)]
+    out_specs = (P(axis), P(axis), P(axis), P(axis), P(None, axis))
+    if has_universe:
+        in_specs.append(P(None))
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=tuple(in_specs),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def enumerate_distributed(plan: Plan, graph: Graph,
+                          mesh: Optional[Mesh] = None,
+                          axis: str = "shard",
+                          batch_per_shard: int = 64,
+                          caps: Optional[Sequence[int]] = None,
+                          req_cap: Optional[int] = None,
+                          hot: int = 0,
+                          rebalance: bool = False,
+                          universe_chunk: int = 1024,
+                          intersect_impl: str = "auto",
+                          max_retries: int = 6) -> DistEnumStats:
+    """Enumerate ``plan`` over ``graph`` on every device of ``mesh``.
+
+    Exact (overflow/drops trigger capacity-doubling retries). The
+    communication cost surfaced in ``cold_rows_fetched`` is the paper's
+    "network communication cost" metric for Fig. 10-style experiments.
+    """
+    if mesh is None:
+        mesh = enumeration_mesh(axis)
+    S = mesh.devices.size
+    shards_np, hot_np, spec = build_row_shards(graph, S, hot=hot)
+    caps0 = list(caps) if caps is not None else default_caps(
+        plan, batch_per_shard, spec.d)
+    # caps divisible by S for the rebalancer stripes
+    caps0 = [-(-c // S) * S for c in caps0]
+    rc = req_cap if req_cap is not None else max(
+        64, 2 * batch_per_shard // S)
+    has_universe = check_jit_supported(plan)
+
+    with jax.default_device(jax.devices()[0]):
+        shards = jax.device_put(
+            shards_np, jax.NamedSharding(mesh, P(axis, None, None)))
+        hot_rows = jax.device_put(
+            hot_np, jax.NamedSharding(mesh, P(None, None)))
+
+    if has_universe:
+        w = min(universe_chunk, max(graph.n, 1))
+        uni_chunks = []
+        for u0 in range(0, graph.n, w):
+            chunk = np.full(w, graph.n, np.int32)
+            hi = min(u0 + w, graph.n)
+            chunk[:hi - u0] = np.arange(u0, hi, dtype=np.int32)
+            uni_chunks.append(jax.device_put(
+                jnp.asarray(chunk), jax.NamedSharding(mesh, P(None))))
+    else:
+        uni_chunks = [None]
+
+    steps: Dict[Tuple[Tuple[int, ...], int], Callable] = {}
+
+    def get_step(c: Tuple[int, ...], r: int):
+        key = (c, r)
+        if key not in steps:
+            steps[key] = build_distributed_step(
+                plan, spec, mesh, axis, c, r, rebalance=rebalance,
+                intersect_impl=intersect_impl)
+        return steps[key]
+
+    gbatch = S * batch_per_shard
+    total = 0
+    retried = 0
+    tot_cold = 0
+    tot_drops_seen = 0
+    per_shard = np.zeros(S, np.int64)
+    level_acc: Optional[np.ndarray] = None
+    for s0 in range(0, graph.n, gbatch):
+        ids = np.arange(s0, s0 + gbatch, dtype=np.int32)
+        svalid = ids < graph.n
+        ids = np.where(svalid, ids, graph.n)
+        sharding = jax.NamedSharding(mesh, P(axis))
+        args = [shards, hot_rows,
+                jax.device_put(jnp.asarray(ids), sharding),
+                jax.device_put(jnp.asarray(svalid), sharding)]
+        for uni in uni_chunks:
+            c, r = tuple(caps0), rc
+            a = args + ([uni] if uni is not None else [])
+            for _ in range(max_retries + 1):
+                counts, overflow, cold, drops, levels = get_step(c, r)(*a)
+                ov = int(np.sum(overflow))
+                dr = int(np.sum(drops))
+                if ov == 0 and dr == 0:
+                    break
+                retried += 1
+                if ov:
+                    c = tuple(x * 2 for x in c)
+                if dr:
+                    r = r * 2
+                tot_drops_seen += dr
+            else:  # pragma: no cover
+                raise RuntimeError("chunk overflowed after retries")
+            total += int(np.sum(np.asarray(counts, dtype=np.int64)))
+            per_shard += np.asarray(counts, dtype=np.int64)
+            tot_cold += int(np.sum(cold))
+            lv = np.asarray(levels)
+            level_acc = lv if level_acc is None else level_acc + lv
+    return DistEnumStats(
+        count=total, per_shard_counts=per_shard,
+        per_shard_level_sizes=(level_acc if level_acc is not None
+                               else np.zeros((0, S))),
+        cold_rows_fetched=tot_cold, request_drops=tot_drops_seen,
+        overflow=0, chunks_retried=retried)

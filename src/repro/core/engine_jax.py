@@ -1,0 +1,440 @@
+"""Vectorized (TPU-native) executor for BENU execution plans.
+
+The paper's runtime is a MIMD task pool: one backtracking DFS per start
+vertex. A TPU pod is a lockstep SPMD machine, so we re-express Algorithm 1's
+recursion as **level-synchronous frontier expansion**: a frontier is a batch
+of partial matches (one row per partial match); every instruction of the
+execution plan acts on the whole frontier at once:
+
+    INI   materialize the start-vertex column
+    DBQ   gather adjacency rows for a frontier column     (the on-demand
+          shuffle: local gather here; all_to_all in engine_dist)
+    INT   row-wise padded-set intersection (Pallas kernel on TPU)
+    TRC   semantically identical to INT under SPMD static shapes — the
+          memoization win of the paper's per-task dict cache shows up as
+          *DBQ dedup* (see engine_dist / unique-based fetch), not as saved
+          FLOPs, because a lockstep batch always executes its full shape
+    ENU   expand each row by its candidate set and compact valid children
+          into a fixed-capacity child frontier (overflow is counted and the
+          driver re-chunks; this is the paper's task splitting, vectorized)
+    RES   count (or emit) rows that are complete matches
+
+The DFS->BFS change preserves the *set* of matches exactly (instructions are
+pure set algebra on a static schedule); only traversal order changes. Every
+shape is static, so the program jits, shards, and dry-runs.
+
+Sets are "padded-with-holes" int32 rows: entries == sentinel (= N) are
+holes; valid entries ascend. Intersection keeps entries in place, so no
+compaction is needed until ENU.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.storage import Graph
+from ..kernels import ops as kops
+from .instructions import (DBQ, ENU, INI, INT, RES, TRC, Instr, Plan, Var)
+from .pattern import Pattern
+
+FetchFn = Callable[[jax.Array], jax.Array]   # ids int32[B] -> rows int32[B,D]
+
+
+# --------------------------------------------------------------------------
+# Device-resident graph
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class DeviceGraph:
+    """Padded adjacency rows on device. Row ``n`` (sentinel row) is all-holes
+    so gathers with invalid ids are safe."""
+
+    rows: jax.Array        # int32[N+1, D]
+    n: int                 # number of real vertices; sentinel value
+
+    @property
+    def d(self) -> int:
+        return self.rows.shape[1]
+
+    @staticmethod
+    def from_graph(graph: Graph, d_max: Optional[int] = None,
+                   lane: int = 128) -> "DeviceGraph":
+        rows, _ = graph.padded_adjacency(d_max=d_max, lane=lane)
+        rows = np.concatenate(
+            [rows, np.full((1, rows.shape[1]), graph.n, np.int32)], axis=0)
+        return DeviceGraph(rows=jnp.asarray(rows), n=graph.n)
+
+    def local_fetch(self) -> FetchFn:
+        rows, n = self.rows, self.n
+
+        def fetch(ids: jax.Array) -> jax.Array:
+            return rows[jnp.clip(ids, 0, n)]
+
+        return fetch
+
+
+# --------------------------------------------------------------------------
+# Plan preprocessing: liveness + static checks
+# --------------------------------------------------------------------------
+
+
+def _liveness(plan: Plan) -> List[frozenset]:
+    """live[i] = vars read at instruction >= i (gathered across ENUs)."""
+    live: List[frozenset] = [frozenset()] * (len(plan.instrs) + 1)
+    acc: frozenset = frozenset()
+    for i in range(len(plan.instrs) - 1, -1, -1):
+        acc = acc | frozenset(v for v in plan.instrs[i].uses()
+                              if v[0] != "op")
+        live[i] = acc
+    return live
+
+
+def check_jit_supported(plan: Plan) -> bool:
+    """Validate the plan; returns True iff it consumes V(G) (detached-vertex
+    matching orders, e.g. the wedge order for the square — the driver then
+    additionally iterates universe chunks)."""
+    n_vg = 0
+    for ins in plan.instrs:
+        if ins.op not in (INI, DBQ, INT, TRC, ENU, RES):
+            raise NotImplementedError(
+                f"engine_jax supports BENU plans only (got {ins.op}); "
+                "S-BENU runs through the ref engine / engine_dist extension")
+        n_vg += sum(1 for v in ins.operands if v[0] == "VG")
+    if n_vg > 1:
+        raise NotImplementedError(
+            "plans with two detached vertices need nested universe loops; "
+            "the best-plan search never emits these")
+    return n_vg == 1
+
+
+# --------------------------------------------------------------------------
+# Instruction primitives
+# --------------------------------------------------------------------------
+
+
+def _apply_filters(sets: jax.Array, filters, env: Dict[Var, jax.Array],
+                   sentinel: int) -> jax.Array:
+    out = sets
+    for op, var in filters:
+        f = env[var][:, None]
+        if op == "<":
+            cond = out < f
+        elif op == ">":
+            cond = out > f
+        elif op == "!=":
+            cond = out != f
+        else:  # pragma: no cover
+            raise ValueError(op)
+        out = jnp.where(cond, out, sentinel)
+    return out
+
+
+def _expand(env: Dict[Var, jax.Array], valid: jax.Array,
+            cand: jax.Array, target: Var, cap: int, live: frozenset,
+            sentinel: int, compaction: str = "cumsum"
+            ) -> Tuple[Dict[Var, jax.Array], jax.Array, jax.Array]:
+    """ENU: frontier [B] -> child frontier [cap]. Returns (env', valid',
+    overflow_count).
+
+    Compaction of the valid children to the front:
+      * "cumsum": positions by prefix-sum + one scatter — O(n) HBM traffic.
+      * "sort":   stable argsort on the invalid mask — XLA lowers to a
+        bitonic network, O(n log^2 n) passes over the buffer. Kept as the
+        §Perf baseline; the cumsum path cut the BENU cell's memory term
+        ~2.8x (EXPERIMENTS.md).
+    Both orders are identical (prefix-sum preserves flat order; the argsort
+    was stable), so results are bit-equal.
+    """
+    B, D = cand.shape
+    n = B * D
+    flat = cand.reshape(n)
+    fvalid = ((cand != sentinel) & valid[:, None]).reshape(n)
+    parent = jnp.repeat(jnp.arange(B, dtype=jnp.int32), D)
+    if compaction == "sort":
+        order = jnp.argsort(~fvalid, stable=True)    # valid rows first
+        take = order[:cap]
+        new_valid = fvalid[take]
+        parents = parent[take]
+    else:
+        pos = jnp.cumsum(fvalid.astype(jnp.int32)) - 1
+        slot = jnp.where(fvalid & (pos < cap), pos, cap)
+        take = jnp.full((cap + 1,), n, jnp.int32)
+        take = take.at[slot].set(jnp.arange(n, dtype=jnp.int32),
+                                 mode="drop")[:cap]
+        new_valid = take < n
+        take = jnp.where(new_valid, take, 0)
+        parents = parent[take]
+    total = jnp.sum(fvalid)
+    overflow = jnp.maximum(total - jnp.sum(new_valid), 0)
+    new_env: Dict[Var, jax.Array] = {}
+    for v, arr in env.items():
+        if v in live:
+            new_env[v] = arr[parents]
+    new_env[target] = jnp.where(new_valid, flat[take], sentinel)
+    return new_env, new_valid, overflow
+
+
+def _vcbc_row_counts(plan: Plan, env: Dict[Var, jax.Array],
+                     valid: jax.Array, sentinel: int,
+                     report: Sequence[Var]) -> jax.Array:
+    """Exact per-row match counts for VCBC-compressed plans.
+
+    Non-core vertices are pairwise non-adjacent (V_c is a vertex cover), so
+    the plan dropped (a) pairwise injectivity and (b) symmetry order
+    constraints between them; we re-impose both here. Closed forms cover
+    <= 2 non-core vertices (every paper pattern's compressed plan); more
+    requires expansion (ref engine).
+    """
+    noncore = [v for v in report if v[0] == "C"]
+    if len(noncore) > 2:
+        raise NotImplementedError(
+            f"{len(noncore)} non-core vertices; use the ref engine or a "
+            "non-VCBC plan")
+    if not noncore:
+        return valid.astype(_count_dtype())
+    sizes = {v: jnp.sum(env[v] != sentinel, axis=1) for v in noncore}
+    if len(noncore) == 1:
+        cnt = sizes[noncore[0]]
+        return jnp.where(valid, cnt, 0).astype(_count_dtype())
+    (va, vb) = noncore
+    a, b = env[va], env[vb]
+    ua, ub = va[1], vb[1]
+    cons = set(plan.constraints)
+    pair_valid = (a[:, :, None] != sentinel) & (b[:, None, :] != sentinel)
+    if (ua, ub) in cons:
+        cond = a[:, :, None] < b[:, None, :]
+    elif (ub, ua) in cons:
+        cond = a[:, :, None] > b[:, None, :]
+    else:
+        cond = a[:, :, None] != b[:, None, :]
+    cnt = jnp.sum(pair_valid & cond, axis=(1, 2))
+    return jnp.where(valid, cnt, 0).astype(_count_dtype())
+
+
+# --------------------------------------------------------------------------
+# Enumerator builder
+# --------------------------------------------------------------------------
+
+
+#: accumulator dtype: int64 when x64 is on (recommended for production —
+#: Table-1-scale graphs have >2^31 matches); int32 otherwise, with the
+#: driver accumulating cross-chunk totals in Python ints (exact as long as
+#: each *chunk* stays below 2^31, guaranteed by the capacity bounds).
+def _count_dtype():
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+@dataclass
+class EnumResult:
+    count: jax.Array                     # scalar: matches in batch
+    overflow: jax.Array                  # scalar: dropped children
+    level_sizes: Tuple[jax.Array, ...]   # frontier occupancy after each ENU
+    matches: Optional[jax.Array] = None  # int32[cap, n] (if collected)
+    matches_valid: Optional[jax.Array] = None
+
+
+jax.tree_util.register_dataclass(
+    EnumResult,
+    data_fields=["count", "overflow", "level_sizes", "matches",
+                 "matches_valid"],
+    meta_fields=[])
+
+
+def build_enumerator(plan: Plan,
+                     sentinel: int,
+                     caps: Sequence[int],
+                     fetch: FetchFn,
+                     collect_matches: bool = False,
+                     intersect_impl: str = "auto",
+                     post_expand: Optional[Callable] = None,
+                     compaction: str = "cumsum"
+                     ) -> Callable[..., EnumResult]:
+    """Compile ``plan`` into a jittable function of (starts, starts_valid
+    [, universe_chunk]).
+
+    ``caps[i]`` is the child-frontier capacity of the i-th ENU instruction.
+    The returned function reports ``overflow`` > 0 when a capacity was hit —
+    callers shrink the start batch or raise caps (driver: enumerate_graph).
+    Plans consuming V(G) (one detached vertex, e.g. the square's wedge
+    order) additionally take ``universe_chunk: int32[W]`` — a sentinel-padded
+    slice of V(G); the driver sums counts over chunks. This is the paper's
+    |V(G)|/θ subtask split for non-adjacent (u_k1, u_k2), vectorized.
+    """
+    has_universe = check_jit_supported(plan)
+    live = _liveness(plan)
+    n_enu = sum(1 for ins in plan.instrs if ins.op == ENU)
+    if len(caps) != n_enu:
+        raise ValueError(f"need {n_enu} caps, got {len(caps)}")
+    if collect_matches and plan.vcbc:
+        raise ValueError("cannot collect raw matches from a VCBC plan")
+
+    isect = functools.partial(kops.intersect_padded, sentinel=sentinel,
+                              impl=intersect_impl)
+
+    def run(starts: jax.Array, starts_valid: jax.Array,
+            universe_chunk: Optional[jax.Array] = None) -> EnumResult:
+        if has_universe and universe_chunk is None:
+            raise ValueError("plan consumes V(G): pass universe_chunk")
+        env: Dict[Var, jax.Array] = {}
+        valid = starts_valid
+        cdt = _count_dtype()
+        count = jnp.zeros((), cdt)
+        overflow = jnp.zeros((), cdt)
+        level_sizes: List[jax.Array] = []
+        matches = None
+        matches_valid = None
+        enu_i = 0
+        ip = 0
+        while ip < len(plan.instrs):
+            ins = plan.instrs[ip]
+            if ins.op == INI:
+                env[ins.target] = jnp.where(valid, starts, sentinel)
+            elif ins.op == DBQ:
+                ids = env[ins.operands[0]]
+                env[ins.target] = fetch(ids)
+            elif ins.op in (INT, TRC):
+                if ins.op == TRC:
+                    sets = [env[ins.operands[2]], env[ins.operands[3]]]
+                else:
+                    sets = []
+                    for v in ins.operands:
+                        if v[0] == "VG":
+                            B = valid.shape[0]
+                            sets.append(jnp.broadcast_to(
+                                universe_chunk[None, :],
+                                (B, universe_chunk.shape[0])))
+                        else:
+                            sets.append(env[v])
+                res = sets[0]
+                for other in sets[1:]:
+                    res = isect(res, other)
+                if ins.filters:
+                    res = _apply_filters(res, ins.filters, env, sentinel)
+                env[ins.target] = res
+            elif ins.op == ENU:
+                cand = env[ins.operands[0]]
+                env, valid, ov = _expand(env, valid, cand, ins.target,
+                                         caps[enu_i], live[ip + 1], sentinel,
+                                         compaction=compaction)
+                overflow = overflow + ov.astype(cdt)
+                if post_expand is not None:
+                    env, valid = post_expand(env, valid)
+                level_sizes.append(jnp.sum(valid))
+                enu_i += 1
+            elif ins.op == RES:
+                if plan.vcbc:
+                    count = count + jnp.sum(
+                        _vcbc_row_counts(plan, env, valid, sentinel,
+                                         ins.report)).astype(cdt)
+                else:
+                    count = count + jnp.sum(valid).astype(cdt)
+                    if collect_matches:
+                        cols = [env[v] for v in ins.report]
+                        matches = jnp.stack(cols, axis=1)
+                        matches_valid = valid
+            ip += 1
+        return EnumResult(count=count, overflow=overflow,
+                          level_sizes=tuple(level_sizes),
+                          matches=matches, matches_valid=matches_valid)
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Driver: enumerate a whole graph by start-vertex chunks
+# --------------------------------------------------------------------------
+
+
+def default_caps(plan: Plan, batch: int, d: int,
+                 growth: float = 4.0, cap_max: int = 1 << 20) -> List[int]:
+    """Heuristic per-level capacities: level0 = batch * d (a start can emit
+    up to deg children), then geometric growth clipped to cap_max."""
+    n_enu = sum(1 for ins in plan.instrs if ins.op == ENU)
+    caps = []
+    cur = batch * max(d // 4, 1)
+    for _ in range(n_enu):
+        caps.append(int(min(max(cur, batch), cap_max)))
+        cur *= growth
+    return caps
+
+
+def enumerate_graph(plan: Plan, graph: Graph,
+                    batch: int = 256,
+                    caps: Optional[Sequence[int]] = None,
+                    collect_matches: bool = False,
+                    intersect_impl: str = "auto",
+                    universe_chunk: int = 1024,
+                    max_retries: int = 6) -> Dict[str, object]:
+    """Run ``plan`` over every start vertex of ``graph`` on one device.
+
+    Exact: chunks with overflow are retried with doubled capacities (the
+    vectorized analogue of the paper's θ task splitting: a too-heavy chunk
+    is re-executed in a shape that fits).
+    """
+    dg = DeviceGraph.from_graph(graph)
+    fetch = dg.local_fetch()
+    sentinel = dg.n
+    total = 0            # python int: exact cross-chunk accumulation
+    overflowed = 0
+    all_matches: List[np.ndarray] = []
+    caps0 = list(caps) if caps is not None else default_caps(
+        plan, batch, dg.d)
+    has_universe = check_jit_supported(plan)
+
+    jitted: Dict[Tuple[int, ...], Callable] = {}
+
+    def get_runner(c: Tuple[int, ...]):
+        if c not in jitted:
+            run = build_enumerator(plan, sentinel, c, fetch,
+                                   collect_matches=collect_matches,
+                                   intersect_impl=intersect_impl)
+            jitted[c] = jax.jit(run)
+        return jitted[c]
+
+    if has_universe:
+        w = min(universe_chunk, max(graph.n, 1))
+        uni_chunks = []
+        for u0 in range(0, graph.n, w):
+            chunk = np.full(w, graph.n, np.int32)
+            hi = min(u0 + w, graph.n)
+            chunk[:hi - u0] = np.arange(u0, hi, dtype=np.int32)
+            uni_chunks.append(jnp.asarray(chunk))
+    else:
+        uni_chunks = [None]
+
+    for s0 in range(0, graph.n, batch):
+        ids = np.arange(s0, s0 + batch, dtype=np.int32)
+        svalid = ids < graph.n
+        ids = np.where(svalid, ids, graph.n)
+        for uni in uni_chunks:
+            c = tuple(caps0)
+            for attempt in range(max_retries + 1):
+                args = (jnp.asarray(ids), jnp.asarray(svalid))
+                if uni is not None:
+                    args = args + (uni,)
+                res = get_runner(c)(*args)
+                ov = int(res.overflow)
+                if ov == 0:
+                    break
+                overflowed += 1
+                c = tuple(int(x * 2) for x in c)
+            else:  # pragma: no cover
+                raise RuntimeError(f"chunk at {s0} overflowed after retries")
+            total = total + int(res.count)
+            if collect_matches and res.matches is not None:
+                m = np.asarray(res.matches)
+                mv = np.asarray(res.matches_valid)
+                all_matches.append(m[mv])
+    out: Dict[str, object] = {"count": total,
+                              "chunks_retried": overflowed}
+    if collect_matches:
+        out["matches"] = (np.concatenate(all_matches, axis=0)
+                          if all_matches else np.zeros((0, plan.n), np.int32))
+    return out

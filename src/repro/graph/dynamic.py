@@ -1,0 +1,105 @@
+"""Dynamic directed data graph storage (paper §5, §6.2).
+
+Maintains exactly the two snapshots S-BENU needs — ``G'_{t-1}`` and the
+current delta sets — using the paper's two-form value design:
+
+* between steps, a vertex value is ``(in_prev, out_prev)``;
+* inside step t, touched vertices additionally carry
+  ``(delta_in, delta_out)`` with per-edge flags ``{'+','-'}``.
+
+``get_adj(v, type, direction, op)`` serves the six adjacency kinds of §5.3.1
+for either snapshot; ``op='+'`` selects ``G'_t``, ``op='-'`` selects
+``G'_{t-1}``, and ``(type='delta', op='*')`` returns the flagged delta set.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .storage import DiGraph
+
+Update = Tuple[str, int, int]  # (op, src, dst)
+
+
+class SnapshotStore:
+    def __init__(self, g0: DiGraph):
+        self.n = g0.n
+        self.prev = g0.copy()           # G'_{t-1}
+        self.delta_out: Dict[int, Dict[int, str]] = {}
+        self.delta_in: Dict[int, Dict[int, str]] = {}
+        self.t = 0
+        self.total_queries = 0
+
+    # ------------------------------------------------------------ time steps
+    def begin_step(self, batch: Sequence[Update]) -> None:
+        """Convert Δo_t into delta adjacency sets (Alg. 4 lines 7-9)."""
+        self.t += 1
+        self.delta_out = {}
+        self.delta_in = {}
+        seen: Set[Tuple[int, int]] = set()
+        for op, a, b in batch:
+            if (a, b) in seen:
+                raise ValueError(f"edge ({a},{b}) appears twice in batch")
+            seen.add((a, b))
+            if op == "+" and self.prev.has_edge(a, b):
+                raise ValueError(f"inserting existing edge ({a},{b})")
+            if op == "-" and not self.prev.has_edge(a, b):
+                raise ValueError(f"deleting missing edge ({a},{b})")
+            self.delta_out.setdefault(a, {})[b] = op
+            self.delta_in.setdefault(b, {})[a] = op
+
+    def end_step(self) -> None:
+        """Merge deltas into the stored snapshot (Alg. 4 line 21)."""
+        for a, dd in self.delta_out.items():
+            for b, op in dd.items():
+                if op == "+":
+                    self.prev.add_edge(a, b)
+                else:
+                    self.prev.remove_edge(a, b)
+        self.delta_out = {}
+        self.delta_in = {}
+
+    # --------------------------------------------------------------- queries
+    def start_vertices(self) -> List[int]:
+        """Vertices with non-empty ΔΓ_out (Alg. 4 line 10)."""
+        return sorted(self.delta_out.keys())
+
+    def delta_adj_out(self, v: int) -> List[Tuple[str, int]]:
+        dd = self.delta_out.get(v, {})
+        return sorted(((op, w) for w, op in dd.items()), key=lambda x: x[1])
+
+    def get_adj(self, v: int, type_: str, direction: str,
+                op: str) -> frozenset:
+        """Γ^{type,direction}_{G'_?}(v); ``?`` = t if op=='+', t-1 if op=='-'."""
+        self.total_queries += 1
+        prev = self.prev.out[v] if direction == "out" else self.prev.inn[v]
+        dd = (self.delta_out if direction == "out" else self.delta_in
+              ).get(v, {})
+        inserted = {w for w, o in dd.items() if o == "+"}
+        deleted = {w for w, o in dd.items() if o == "-"}
+        unaltered = prev - deleted
+        if type_ == "unaltered":
+            return frozenset(unaltered)
+        if type_ == "either":
+            if op == "+":     # G'_t
+                return frozenset(unaltered | inserted)
+            return frozenset(prev)
+        if type_ == "delta":
+            if op == "+":
+                return frozenset(inserted)
+            return frozenset(deleted)
+        raise ValueError(type_)
+
+    # ----------------------------------------------------------- test helpers
+    def snapshot(self, which: str) -> DiGraph:
+        """Materialize G'_t ('cur') or G'_{t-1} ('prev') — test oracle only."""
+        if which == "prev":
+            return self.prev.copy()
+        g = self.prev.copy()
+        for a, dd in self.delta_out.items():
+            for b, op in dd.items():
+                if op == "+":
+                    g.add_edge(a, b)
+                else:
+                    g.remove_edge(a, b)
+        return g

@@ -1,0 +1,160 @@
+"""Data-graph storage substrate.
+
+The paper stores adjacency sets in a distributed KV database keyed by vertex
+id. Our in-memory logical form mirrors that: per-vertex *sorted* adjacency
+arrays. Two physical layouts are provided:
+
+* ``Graph`` / ``DiGraph``: python/numpy adjacency lists — used by the plan
+  compiler, the reference engine and the dynamic-graph machinery.
+* ``padded_adjacency``: a dense ``int32[N, D]`` row matrix padded with the
+  sentinel ``N`` — the device-resident layout consumed by the JAX engines and
+  the DistributedRowStore (rows are what DBQ fetches).
+
+**Total order / symmetry breaking**: the paper uses a degree-based total
+order on V(G) for static graphs. We *relabel* vertices by ``(degree, id)``
+ascending at load time (``canonicalize=True``) so that the total order is the
+natural integer order — symmetry-breaking filters compile to plain integer
+compares on both CPU and TPU.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.estimate import GraphStats
+
+Edge = Tuple[int, int]
+
+
+class Graph:
+    """Static undirected simple graph with sorted adjacency arrays."""
+
+    def __init__(self, n: int, adj: List[np.ndarray],
+                 relabel: Optional[np.ndarray] = None):
+        self.n = n
+        self.adj = adj                      # adj[v]: sorted int64 array
+        self.relabel = relabel              # original id -> canonical id
+        self.deg = np.array([len(a) for a in adj], dtype=np.int64)
+
+    # ------------------------------------------------------------- builders
+    @staticmethod
+    def from_edges(n: int, edges: Iterable[Edge],
+                   canonicalize: bool = True) -> "Graph":
+        nbr: List[set] = [set() for _ in range(n)]
+        for a, b in edges:
+            if a == b:
+                continue
+            nbr[a].add(b)
+            nbr[b].add(a)
+        if canonicalize:
+            deg = np.array([len(s) for s in nbr])
+            # vertices sorted by (degree, id) ascending; rank = new id
+            order = np.lexsort((np.arange(n), deg))
+            relabel = np.empty(n, dtype=np.int64)
+            relabel[order] = np.arange(n)
+            adj = [None] * n  # type: ignore
+            for v in range(n):
+                adj[relabel[v]] = np.array(
+                    sorted(relabel[w] for w in nbr[v]), dtype=np.int64)
+            return Graph(n, adj, relabel)
+        adj = [np.array(sorted(s), dtype=np.int64) for s in nbr]
+        return Graph(n, adj)
+
+    # -------------------------------------------------------------- queries
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.adj[v]
+
+    def has_edge(self, a: int, b: int) -> bool:
+        arr = self.adj[a]
+        i = np.searchsorted(arr, b)
+        return i < len(arr) and arr[i] == b
+
+    @property
+    def m(self) -> int:
+        return int(self.deg.sum() // 2)
+
+    def stats(self) -> GraphStats:
+        return GraphStats(n_vertices=self.n, n_edges=self.m)
+
+    def edges(self) -> Iterable[Edge]:
+        for v in range(self.n):
+            for w in self.adj[v]:
+                if v < w:
+                    yield (v, int(w))
+
+    # ---------------------------------------------------------- dense layout
+    def padded_adjacency(self, d_max: Optional[int] = None,
+                         lane: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+        """``(rows int32[N, D], deg int32[N])`` padded with sentinel N.
+
+        ``D`` is rounded up to a multiple of ``lane`` for friendly layouts
+        (the Pallas kernel wants a multiple of 128; callers pass lane=128).
+        """
+        d = int(self.deg.max()) if d_max is None else d_max
+        d = max(d, 1)
+        d = ((d + lane - 1) // lane) * lane
+        rows = np.full((self.n, d), self.n, dtype=np.int32)
+        for v in range(self.n):
+            a = self.adj[v][:d]
+            rows[v, :len(a)] = a
+        return rows, self.deg.astype(np.int32)
+
+
+class DiGraph:
+    """Static directed simple graph (S-BENU snapshots)."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.out: List[set] = [set() for _ in range(n)]
+        self.inn: List[set] = [set() for _ in range(n)]
+
+    @staticmethod
+    def from_edges(n: int, edges: Iterable[Edge]) -> "DiGraph":
+        g = DiGraph(n)
+        for a, b in edges:
+            g.add_edge(a, b)
+        return g
+
+    def add_edge(self, a: int, b: int) -> None:
+        if a == b:
+            return
+        self.out[a].add(b)
+        self.inn[b].add(a)
+
+    def remove_edge(self, a: int, b: int) -> None:
+        self.out[a].discard(b)
+        self.inn[b].discard(a)
+
+    def has_edge(self, a: int, b: int) -> bool:
+        return b in self.out[a]
+
+    def copy(self) -> "DiGraph":
+        g = DiGraph(self.n)
+        g.out = [set(s) for s in self.out]
+        g.inn = [set(s) for s in self.inn]
+        return g
+
+    @property
+    def m(self) -> int:
+        return sum(len(s) for s in self.out)
+
+    def edges(self) -> Iterable[Edge]:
+        for v in range(self.n):
+            for w in sorted(self.out[v]):
+                yield (v, w)
+
+    def stats(self) -> GraphStats:
+        return GraphStats(n_vertices=self.n, n_edges=self.m)
+
+
+def edge_index_from_graph(g: Graph) -> np.ndarray:
+    """``int32[2, 2m]`` symmetric COO edge index (GNN substrate)."""
+    src, dst = [], []
+    for v in range(g.n):
+        for w in g.adj[v]:
+            src.append(v)
+            dst.append(int(w))
+    return np.array([src, dst], dtype=np.int32)

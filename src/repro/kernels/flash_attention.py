@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: flash attention (online-softmax tiling, causal, GQA).
+
+The LM hot-spot for the train_4k / prefill_32k cells. Classic q-block x
+kv-block streaming: f32 running max / sum / accumulator live in VMEM scratch;
+KV is consumed block-by-block so the [Tq, Tk] score matrix never hits HBM.
+Tiles are 128-aligned for the MXU. GQA is handled by mapping each q-head to
+its kv-head in the grid index map (no KV repeat materialized).
+
+Grid: (batch * q_heads, Tq / bq, Tk / bk) — the kv axis is the innermost
+(sequential on TPU) dimension, so scratch accumulators carry across kv steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  tq: int, tk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # [bq, d]
+    k = k_ref[0].astype(jnp.float32)            # [bk, d]
+    v = v_ref[0].astype(jnp.float32)            # [bk, d]
+    s = jnp.dot(q, k.T) * scale                 # [bq, bk]
+    if causal:
+        # query row r (global qi*bq + r) attends keys <= r + (tk - tq)
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos + (tk - tq), s, NEG_INF)
+
+    m_prev = m_ref[...]                         # [bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                      # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)         # fully-masked rows -> 0 out
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, scale: float | None = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Tq, d]; k, v: [B, Hkv, Tk, d] -> [B, Hq, Tq, d]."""
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    assert tq % bq == 0 and tk % bk == 0, (tq, bq, tk, bk)
+
+    qf = q.reshape(b * hq, tq, d)
+    kf = k.reshape(b * hkv, tk, d)
+    vf = v.reshape(b * hkv, tk, d)
+
+    def q_map(h, i, j):
+        return (h, i, 0)
+
+    def kv_map(h, i, j):
+        # map flat q-head h = bi * hq + hqi to kv row bi * hkv + hqi // group
+        bi = h // hq
+        hi = h % hq
+        return (bi * hkv + hi // group, j, 0)
+
+    grid = (b * hq, tq // bq, tk // bk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, tq=tq, tk=tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, tq, d)

@@ -1,0 +1,106 @@
+"""jit'd public wrappers around the Pallas kernels with jnp fallbacks.
+
+Dispatch policy: ``impl='auto'`` selects the Pallas kernel on TPU backends
+and the pure-jnp reference elsewhere (this container is CPU-only; Pallas
+TPU kernels are exercised via ``interpret=True`` in tests). All callers in
+the model/engine code go through this module so the implementation can be
+swapped per-backend without touching call sites.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rmsnorm_pallas
+from .sorted_intersect import sorted_intersect_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, fill) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+# --------------------------------------------------------------------------
+# intersect
+# --------------------------------------------------------------------------
+
+
+def intersect_padded(a: jax.Array, b: jax.Array, sentinel: int,
+                     impl: str = "auto") -> jax.Array:
+    """Row-wise padded-set intersection; see kernels/ref.py for semantics.
+
+    a, b: int32[B, D]. ``impl``: auto | pallas | ref | chunked | interpret.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else ("chunked" if a.shape[-1] > 512
+                                           else "ref")
+    if impl == "ref":
+        return ref.sorted_intersect(a, b, sentinel)
+    if impl == "chunked":
+        return ref.sorted_intersect_chunked(a, b, sentinel)
+    interpret = impl == "interpret"
+    B, D = a.shape
+    bm = 8 if B % 8 == 0 else 1
+    bk = 128 if D % 128 == 0 else D
+    ap = _pad_to(a, 0, bm, sentinel)
+    bp = _pad_to(b, 0, bm, sentinel)
+    out = sorted_intersect_pallas(ap, bp, sentinel, bm=bm, bk=bk,
+                                  interpret=interpret)
+    return out[:B]
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: Optional[float] = None,
+                    impl: str = "auto") -> jax.Array:
+    """q: [B, Hq, Tq, d]; k, v: [B, Hkv, Tk, d] -> [B, Hq, Tq, d]."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  interpret=(impl == "interpret"))
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+            impl: str = "auto") -> jax.Array:
+    """RMSNorm over the last axis; arbitrary leading dims."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.rmsnorm(x, gamma, eps)
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, shape[-1])
+    bm = 256
+    while rows % bm != 0:
+        bm //= 2
+    out = rmsnorm_pallas(x2, gamma, eps=eps, bm=max(bm, 1),
+                         interpret=(impl == "interpret"))
+    return out.reshape(shape)

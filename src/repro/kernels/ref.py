@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+These are the semantics-defining implementations: each Pallas kernel in this
+package is validated against the function of the same name here (interpret
+mode on CPU, sweeps over shapes/dtypes in ``tests/test_kernels.py``).
+
+Padded-set convention (BENU substrate)
+--------------------------------------
+A vertex set is an ``int32[D]`` row. Entries equal to the *sentinel* (the
+number of real vertices, ``N``) are holes; valid entries are strictly
+ascending among themselves. Intersection keeps entries of ``a`` that are
+members of ``b`` **in place** (order- and position-preserving), so results
+stay valid padded sets without compaction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# sorted_intersect
+# --------------------------------------------------------------------------
+
+
+def sorted_intersect(a: jax.Array, b: jax.Array, sentinel: int) -> jax.Array:
+    """Row-wise padded-set intersection ``a ∩ b`` (kept in ``a``'s slots).
+
+    a, b: int32[..., D] padded sets. Returns int32[..., D].
+    """
+    member = jnp.any(a[..., :, None] == b[..., None, :], axis=-1)
+    valid = a != sentinel
+    return jnp.where(valid & member, a, sentinel)
+
+
+def sorted_intersect_chunked(a: jax.Array, b: jax.Array, sentinel: int,
+                             chunk: int = 128) -> jax.Array:
+    """Same semantics, O(D) memory: scan over b in chunks (used by the
+    pure-jnp engines when D is large; the Pallas kernel tiles the same way
+    in VMEM)."""
+    d = b.shape[-1]
+    pad = (-d) % chunk
+    if pad:
+        b = jnp.concatenate(
+            [b, jnp.full(b.shape[:-1] + (pad,), sentinel, b.dtype)], axis=-1)
+    nchunks = b.shape[-1] // chunk
+    bc = jnp.moveaxis(
+        b.reshape(b.shape[:-1] + (nchunks, chunk)), -2, 0)  # [nc, ..., chunk]
+
+    def step(member, bk):
+        m = jnp.any(a[..., :, None] == bk[..., None, :], axis=-1)
+        return member | m, None
+
+    member0 = jnp.zeros(a.shape, dtype=bool)
+    member, _ = jax.lax.scan(step, member0, bc)
+    valid = a != sentinel
+    return jnp.where(valid & member, a, sentinel)
+
+
+# --------------------------------------------------------------------------
+# flash_attention (reference: plain softmax attention)
+# --------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None
+                    ) -> jax.Array:
+    """Reference attention. q: [B, Hq, Tq, d]; k, v: [B, Hkv, Tk, d].
+
+    GQA: Hq must be a multiple of Hkv; kv heads are repeated.
+    """
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        # query i attends to keys [0, i + (tk - tq)] (decode offset aware)
+        qi = jnp.arange(tq)[:, None] + (tk - tq)
+        ki = jnp.arange(tk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * gamma."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: fused RMSNorm (row-tiled).
+
+Cheap fused epilogue used by every LM layer: one pass computes the row mean
+square and applies the scale — avoids materializing the normalized
+intermediate in HBM. f32 accumulation regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)          # [bm, d]
+    g = g_ref[...].astype(jnp.float32)          # [1, d]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def rmsnorm_pallas(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+                   bm: int = 256, interpret: bool = False) -> jax.Array:
+    """RMSNorm over the last axis. x: [R, d] (callers flatten batch dims)."""
+    R, d = x.shape
+    assert gamma.shape == (d,)
+    bm = min(bm, R)
+    assert R % bm == 0, f"rows {R} not a multiple of bm={bm}"
+    grid = (R // bm,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma[None, :])

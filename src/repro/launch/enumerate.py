@@ -1,0 +1,66 @@
+"""Distributed subgraph-enumeration launcher (the paper's workload).
+
+    PYTHONPATH=src python -m repro.launch.enumerate \
+        --pattern chordal-square --n 2000 --edges 8000 [--devices 8] \
+        [--hot 64] [--rebalance] [--vcbc]
+
+Generates a synthetic graph, compiles the best execution plan (Alg. 3 with
+all optimizations), and runs the distributed frontier engine over every
+device, reporting counts + the paper's cost metrics (DBQ rows crossed /
+computation per shard / skew).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="chordal-square")
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--edges", type=int, default=8000)
+    ap.add_argument("--graph", choices=["er", "powerlaw"],
+                    default="powerlaw")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (set before jax init)")
+    ap.add_argument("--batch-per-shard", type=int, default=256)
+    ap.add_argument("--hot", type=int, default=64)
+    ap.add_argument("--rebalance", action="store_true")
+    ap.add_argument("--vcbc", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    from ..core.engine_dist import enumerate_distributed
+    from ..core.pattern import get_pattern
+    from ..core.plangen import generate_best_plan
+    from ..graph.generate import erdos_renyi, powerlaw
+
+    P = get_pattern(args.pattern)
+    g = (powerlaw(args.n, max(args.edges // args.n, 2), seed=args.seed)
+         if args.graph == "powerlaw"
+         else erdos_renyi(args.n, args.edges, seed=args.seed))
+    plan = generate_best_plan(P, g.stats(), vcbc=args.vcbc)
+    print(plan.pretty())
+    t0 = time.time()
+    st = enumerate_distributed(plan, g,
+                               batch_per_shard=args.batch_per_shard,
+                               hot=args.hot, rebalance=args.rebalance)
+    dt = time.time() - t0
+    print(f"\nmatches            : {st.count}")
+    print(f"wall time          : {dt:.2f}s")
+    print(f"cold rows fetched  : {st.cold_rows_fetched} "
+          f"(x {plan.n * 4}B row bytes = "
+          f"{st.cold_rows_fetched * 512 / 1e6:.1f}MB class)")
+    print(f"per-shard matches  : {st.per_shard_counts.tolist()}")
+    print(f"chunks retried     : {st.chunks_retried}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is the outer pure-DP axis (DCN between pods; gradients all-reduce
+over it, parameters stay replicated pod-to-pod).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run forces 512 host devices before first jax init; smoke
+tests run with the default single device).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devs)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this)")
+    # more devices than the mesh (e.g. 512 forced, single-pod 256 wanted)
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def flat_axes(multi_pod: bool):
+    """All mesh axes flattened (edge-sharding, candidate-sharding, BENU)."""
+    return ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -1,0 +1,287 @@
+"""PartitionSpec assignment for every parameter / cache / batch pytree.
+
+LM parameter rules (FSDP over "data", TP/EP over "model"):
+
+    embed [V, D]                  (model, data)     vocab x fsdp
+    lm_head [D, V]                (data, model)
+    wq/wk/wv [L, D, HD]           (-, data, model)  fsdp x TP(flattened heads)
+    wo [L, HD, D]                 (-, model, data)
+    biases [L, HD]                (-, model)
+    swiglu gate/up [L, D, F]      (-, data, model)
+    swiglu down [L, F, D]         (-, model, data)
+    MLA wkv_a [L, D, r+rope]      (-, data, -)
+    MLA wkv_b [L, r, H(n+v)]      (-, -, model)
+    MoE router [L, D, E]          (-, data, -)
+    MoE gate/up [L, E, D, F]      (-, model, data, -)   EP over model
+    MoE down [L, E, F, D]         (-, model, -, data)
+    norms                         replicated
+
+Optimizer state (m, v) inherits the parameter spec leaf-for-leaf (FSDP: opt
+state shards with its parameter). KV caches shard the *sequence* axis over
+"model" (decode_32k) or over every axis (long_500k) — the softmax over the
+sharded axis compiles to partial-max/sum + all-reduce, i.e. flash-decode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes, flat_axes
+
+DATA, MODEL = "data", "model"
+
+
+def _key_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return tuple(names)
+
+
+def lm_param_spec_one(names: Tuple[str, ...], ndim: int) -> P:
+    leaf = names[-1] if names else ""
+    in_stack = any(n.endswith("_layers") for n in names)
+    lead = (None,) if in_stack else ()
+    if leaf == "embed":
+        return P(MODEL, DATA)
+    if leaf == "lm_head":
+        return P(DATA, MODEL)
+    if leaf in ("final_norm",):
+        return P(None)
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_up"):
+        if ndim == len(lead) + 3:                   # MoE expert [L, E, D, F]
+            return P(*lead, MODEL, DATA, None)
+        return P(*lead, DATA, MODEL)
+    if leaf in ("wo", "w_down"):
+        if ndim == len(lead) + 3:                   # [L, E, F, D]
+            return P(*lead, MODEL, None, DATA)
+        return P(*lead, MODEL, DATA)
+    if leaf in ("bq", "bk", "bv"):
+        return P(*lead, MODEL)
+    if leaf == "wkv_a":
+        return P(*lead, DATA, None)
+    if leaf == "wkv_b":
+        return P(*lead, None, MODEL)
+    if leaf == "router":
+        return P(*lead, DATA, None)
+    # norms / scalars / anything else: replicated
+    return P(*([None] * ndim))
+
+
+def lm_param_specs(shapes: Any) -> Any:
+    """Pytree of PartitionSpec matching a params pytree (from eval_shape)."""
+    def assign(path, leaf):
+        return lm_param_spec_one(_key_names(path), leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def opt_state_specs(param_specs: Any) -> Any:
+    """AdamWState(step, m, v) mirroring the param specs."""
+    from ..train.optimizer import AdamWState
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def fsdp2d_param_specs(shapes: Any, mesh: Mesh,
+                       multi_pod: bool = False) -> Any:
+    """Pure 2D FSDP: every parameter sharded over the FLATTENED
+    ("data","model") axes on its largest divisible non-stack dim; no tensor
+    parallelism anywhere.
+
+    Rationale (phi4 train_4k hillclimb, EXPERIMENTS.md §Perf): with TP the
+    forward/backward insert ~3 activation all-reduces of [B/dev, T, D] per
+    layer per microbatch over the model axis — at 4k tokens/chip those
+    dwarf the parameter traffic. 2D FSDP removes activation collectives
+    entirely; parameters are re-gathered per pass, which is cheap for
+    <=4B-param models (napkin in EXPERIMENTS.md)."""
+    flat = flat_axes(multi_pod)[1:] if multi_pod else flat_axes(False)
+    # exclude "pod": parameters replicated across pods (DCN)
+    size = 1
+    for a in flat:
+        size *= mesh.shape[a]
+
+    def assign(path, leaf):
+        names = _key_names(path)
+        in_stack = any(n.endswith("_layers") for n in names)
+        start = 1 if in_stack and leaf.ndim > 1 else 0
+        best, best_dim = None, -1
+        for i in range(start, leaf.ndim):
+            if leaf.shape[i] % size == 0 and leaf.shape[i] > best_dim:
+                best, best_dim = i, leaf.shape[i]
+        entries = [None] * leaf.ndim
+        if best is not None:
+            entries[best] = flat
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def zero1_param_specs(shapes: Any) -> Any:
+    """ZeRO-1 layout: parameters sharded over "model" only (replicated
+    across "data"), optimizer state additionally sharded over "data".
+
+    vs FSDP: the per-layer-per-microbatch parameter all-gathers disappear;
+    the compiler derives exactly one grads reduce(-scatter) + one updated-
+    param all-gather per step from the spec difference between params
+    (data-replicated) and opt state (data-sharded). Wire cost becomes
+    O(params) per step instead of O(params x passes x microbatches).
+    """
+    def assign(path, leaf):
+        names = _key_names(path)
+        spec = lm_param_spec_one(names, leaf.ndim)
+        entries = [None if ax == DATA else ax for ax in spec] \
+            + [None] * (leaf.ndim - len(spec))
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def zero1_opt_specs(param_specs: Any, shapes: Any, mesh: Mesh) -> Any:
+    """Opt-state specs: param spec + "data" added on the first free,
+    divisible dimension (the ZeRO-1 shard axis)."""
+    from ..train.optimizer import AdamWState
+
+    def assign(spec: P, leaf) -> P:
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        dsize = mesh.shape[DATA]
+        for i, ax in enumerate(entries):
+            if ax is None and leaf.shape[i] % dsize == 0 \
+                    and leaf.shape[i] >= dsize:
+                entries[i] = DATA
+                break
+        return P(*entries)
+
+    mv = jax.tree.map(assign, param_specs, shapes,
+                      is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), m=mv, v=mv)
+
+
+def cache_specs(shapes: Any, multi_pod: bool, long_context: bool) -> Any:
+    """KV-cache specs. GQA leaves: k/v [nl, B, S, KV, dh]; MLA: c_kv
+    [nl, B, S, r], k_rope [nl, B, S, rope]; length [nl]."""
+    seq_axes = flat_axes(multi_pod) if long_context else MODEL
+    dp = dp_axes(multi_pod) if not long_context else None
+
+    def assign(path, leaf):
+        names = _key_names(path)
+        leafname = names[-1]
+        if leafname in ("k", "v"):
+            return P(None, dp, seq_axes, None, None)
+        if leafname == "c_kv" or leafname == "k_rope":
+            return P(None, dp, seq_axes, None)
+        return P(*([None] * leaf.ndim))             # lengths
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def gnn_param_specs(shapes: Any) -> Any:
+    """GNN models are small: replicate every leaf."""
+    return jax.tree.map(lambda l: P(*([None] * l.ndim)), shapes)
+
+
+def bst_param_specs(shapes: Any) -> Any:
+    def assign(path, leaf):
+        names = _key_names(path)
+        leafname = names[-1] if names else ""
+        if leafname in ("item_emb", "user_emb"):
+            return P(MODEL, None)                   # row-sharded tables
+        if leafname == "w0" and "mlp" in names:
+            return P(None, MODEL)                   # widest MLP matmul
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def batch_specs(family: str, kind: str, specs: Dict[str, Any],
+                multi_pod: bool) -> Dict[str, P]:
+    dp = dp_axes(multi_pod)
+    flat = flat_axes(multi_pod)
+    out: Dict[str, P] = {}
+    if family == "lm":
+        for k, v in specs.items():
+            if kind == "lm_long_decode":
+                out[k] = P(*([None] * v.ndim))      # batch=1
+            else:
+                out[k] = P(dp, *([None] * (v.ndim - 1)))
+        return out
+    if family == "gnn":
+        for k, v in specs.items():
+            if k in ("edge_src", "edge_dst", "edge_attr"):
+                out[k] = P(flat, *([None] * (v.ndim - 1)))
+            else:
+                out[k] = P(*([None] * v.ndim))      # node tensors replicated
+        return out
+    if family == "recsys":
+        for k, v in specs.items():
+            if kind == "rec_retrieval":
+                out[k] = (P(flat) if k == "cand_ids"
+                          else P(*([None] * v.ndim)))
+            else:
+                out[k] = P(dp, *([None] * (v.ndim - 1)))
+        return out
+    if family == "benu":
+        shard = flat
+        return {"shards": P(shard, None, None),
+                "hot_rows": P(None, None),
+                "starts": P(shard), "starts_valid": P(shard)}
+    raise KeyError(family)
+
+
+def sanitize(spec_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:
+    """Drop axis assignments whose mesh size does not divide the dim.
+
+    jit ``in_shardings`` require exact divisibility (unlike internal
+    with_sharding_constraint, which GSPMD pads). Example: granite's vocab
+    49155 is not divisible by 16 — its embed falls back from
+    (model, data) to (None, data). MoE stacks whose expert count does not
+    divide the model axis fall back to sharding the FFN dim instead
+    (handled here generically by trying a rotated assignment)."""
+    def size(axis) -> int:
+        if axis is None:
+            return 1
+        axes = (axis,) if isinstance(axis, str) else axis
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def fix(spec: P, leaf) -> P:
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        dropped = []
+        for i, ax in enumerate(entries):
+            if ax is not None and leaf.shape[i] % size(ax) != 0:
+                dropped.append(ax)
+                entries[i] = None
+        # try to re-home dropped axes on a dividing, unassigned dim
+        for ax in dropped:
+            for i, cur in enumerate(entries):
+                if cur is None and leaf.shape[i] % size(ax) == 0 \
+                        and leaf.shape[i] >= size(ax) and leaf.shape[i] > 1:
+                    taken = [e for e in entries if e is not None]
+                    flat_taken = set()
+                    for t in taken:
+                        flat_taken.update((t,) if isinstance(t, str) else t)
+                    axes = (ax,) if isinstance(ax, str) else ax
+                    if flat_taken & set(axes):
+                        continue
+                    entries[i] = ax
+                    break
+        return P(*entries)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, spec_tree: Any, shape_tree: Any = None) -> Any:
+    if shape_tree is not None:
+        spec_tree = sanitize(spec_tree, shape_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

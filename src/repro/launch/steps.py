@@ -1,0 +1,362 @@
+"""Step builders: one (jit-able fn, arg specs, shardings) per dry-run cell.
+
+``build_cell(arch, shape, mesh, multi_pod)`` returns a :class:`CellProgram`
+with everything the dry-run needs: the step function, ShapeDtypeStruct
+stand-ins for every argument, and the in/out shardings. The same builders
+power the real train/serve launchers.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.base import ArchSpec
+from ..layers.common import ShardCtx
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update
+from .mesh import dp_axes, flat_axes
+from .shardings import (batch_specs, bst_param_specs, cache_specs,
+                        gnn_param_specs, lm_param_specs, named,
+                        opt_state_specs, zero1_opt_specs,
+                        zero1_param_specs)
+
+
+@dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]              # ShapeDtypeStructs (pytrees)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.meta.get("donate", ()))
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def _eval_params(init_fn) -> Any:
+    return jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+
+
+def _lm_cell(spec: ArchSpec, shape: str, mesh: Mesh,
+             multi_pod: bool, sharding_mode: str = "fsdp") -> CellProgram:
+    from ..models.transformer import (decode_step, init_caches, init_params,
+                                      loss_fn, prefill_step)
+    cfg = spec.model_cfg
+    sp = spec.shapes[shape]
+    is_train = sp.kind == "lm_train"
+    if sharding_mode == "fsdp2d" and is_train:
+        # no TP: batch over every axis, params 2D-sharded
+        ctx = ShardCtx(mesh=mesh, dp=flat_axes(multi_pod), tp=None)
+    else:
+        ctx = ShardCtx(mesh=mesh, dp=dp_axes(multi_pod), tp="model")
+    pshapes = _eval_params(functools.partial(init_params, cfg=cfg))
+    if sharding_mode == "zero1" and is_train:
+        pspecs = zero1_param_specs(pshapes)
+    elif sharding_mode == "fsdp2d" and is_train:
+        from .shardings import fsdp2d_param_specs
+        pspecs = fsdp2d_param_specs(pshapes, mesh, multi_pod)
+    else:
+        pspecs = lm_param_specs(pshapes)
+    psh = named(mesh, pspecs, pshapes)
+    ispecs = spec.input_specs(shape)
+    if sharding_mode == "fsdp2d" and is_train:
+        fa = flat_axes(multi_pod)
+        bspec = {k: P(fa, *([None] * (v.ndim - 1)))
+                 for k, v in ispecs.items()}
+    else:
+        bspec = batch_specs("lm", sp.kind, ispecs, multi_pod)
+    bsh = named(mesh, bspec, ispecs)
+    meta = {"family": "lm", "kind": sp.kind,
+            "n_params": cfg.n_params, "n_active_params": cfg.n_active_params,
+            "dims": dict(sp.dims)}
+
+    if sp.kind == "lm_train":
+        opt_cfg = AdamWConfig()
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        if sharding_mode == "zero1":
+            ospecs = zero1_opt_specs(pspecs, pshapes, mesh)
+        else:
+            ospecs = opt_state_specs(pspecs)
+        osh = named(mesh, ospecs, oshapes)
+        meta["sharding_mode"] = sharding_mode
+        # gradient-accumulation microbatching: activation working set
+        # scales 1/m while keeping the global batch (grads accumulate in
+        # the sharded f32 grad buffer). m is capped so the per-microbatch
+        # batch still shards over every DP axis (a smaller slice would
+        # force XLA to replicate compute — measured 3.8x FLOP inflation,
+        # EXPERIMENTS.md §Perf).
+        dp_size = ctx.dp_size
+        mb = int(sp.dims.get("microbatches", 4))
+        mb = max(1, min(mb, sp.dims["batch"] // max(dp_size, 1)))
+        meta["microbatches"] = mb
+
+        def train_step(params, opt_state, batch):
+            b = batch["tokens"].shape[0]
+            mbatch = {k: v.reshape((mb, b // mb) + v.shape[1:])
+                      for k, v in batch.items()}
+
+            def one(carry, mbt):
+                gsum, lsum = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, mbt, cfg, ctx),
+                    has_aux=True)(params)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(one, (g0, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            new_p, new_o, om = adamw_update(opt_cfg, grads, opt_state,
+                                            params)
+            metrics = dict(om)
+            metrics["loss"] = lsum / mb
+            return new_p, new_o, metrics
+
+        return CellProgram(
+            name=f"{spec.name}:{shape}", fn=train_step,
+            args=(pshapes, oshapes, ispecs),
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, None), meta=meta)
+
+    if sp.kind == "lm_prefill":
+        def step(params, batch):
+            return prefill_step(params, batch["tokens"], cfg, ctx)
+
+        return CellProgram(
+            name=f"{spec.name}:{shape}", fn=step,
+            args=(pshapes, ispecs), in_shardings=(psh, bsh),
+            out_shardings=None, meta=meta)
+
+    # decode (decode_32k / long_500k)
+    long_ctx = sp.kind == "lm_long_decode"
+    b, s_max = sp.dims["batch"], sp.dims["seq"]
+    cshapes = jax.eval_shape(
+        functools.partial(init_caches, cfg, b, s_max))
+    csh = named(mesh, cache_specs(cshapes, multi_pod, long_ctx), cshapes)
+
+    def step(params, caches, batch, position):
+        return decode_step(params, caches, batch["tokens"], position,
+                           cfg, ctx)
+
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return CellProgram(
+        name=f"{spec.name}:{shape}", fn=step,
+        args=(pshapes, cshapes, ispecs, pos),
+        in_shardings=(psh, csh, bsh, NamedSharding(mesh, P())),
+        out_shardings=(None, csh), meta=meta)
+
+
+# --------------------------------------------------------------------------
+# GNN cells
+# --------------------------------------------------------------------------
+
+
+def _gnn_cell(spec: ArchSpec, shape: str, mesh: Mesh,
+              multi_pod: bool) -> CellProgram:
+    import dataclasses
+    from ..models.gnn import gnn_loss, init_gnn_params
+    cfg = spec.model_cfg_for(shape)
+    sp = spec.shapes[shape]
+    # full-batch-large graphs: explicit 1D-distributed message passing
+    # (models/gnn_dist.py) — node blocks over "model", edge shards over the
+    # data axes, shard_map locality (replicated nodes peak at 151 GiB/dev
+    # on ogb_products; see EXPERIMENTS.md §Perf).
+    big = sp.kind == "gnn_full" and sp.dims["n_nodes"] > 1_000_000
+    if big:
+        cfg = dataclasses.replace(cfg, remat=True,
+                                  dtype=jnp.bfloat16)
+        ctx = None
+    else:
+        ctx = ShardCtx(mesh=mesh, dp=flat_axes(multi_pod), tp=None)
+    pshapes = _eval_params(functools.partial(init_gnn_params, cfg=cfg))
+    pspecs = gnn_param_specs(pshapes)
+    psh = named(mesh, pspecs, pshapes)
+    ispecs = spec.input_specs(shape)
+    bspec = batch_specs("gnn", sp.kind, ispecs, multi_pod)
+    if big:
+        from ..models.gnn_dist import build_dist_loss
+        dist_loss, bspec_for = build_dist_loss(
+            cfg, mesh, n_total=sp.dims["n_nodes"],
+            edge_axes=flat_axes(multi_pod))
+        bspec = {k: bspec_for(k, v.ndim) for k, v in ispecs.items()}
+    bsh = named(mesh, bspec, ispecs)
+    opt_cfg = AdamWConfig()
+    oshapes = jax.eval_shape(adamw_init, pshapes)
+    osh = named(mesh, opt_state_specs(pspecs), oshapes)
+
+    def train_step(params, opt_state, batch):
+        lfn = (dist_loss if big
+               else (lambda p, b: gnn_loss(p, b, cfg, ctx)))
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lfn(p, batch), has_aux=True)(params)
+        new_p, new_o, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return new_p, new_o, metrics
+
+    return CellProgram(
+        name=f"{spec.name}:{shape}", fn=train_step,
+        args=(pshapes, oshapes, ispecs),
+        in_shardings=(psh, osh, bsh), out_shardings=(psh, osh, None),
+        meta={"family": "gnn", "kind": sp.kind, "n_params": cfg.n_params,
+              "n_active_params": cfg.n_params, "dims": dict(sp.dims)})
+
+
+# --------------------------------------------------------------------------
+# RecSys cells
+# --------------------------------------------------------------------------
+
+
+def _rec_cell(spec: ArchSpec, shape: str, mesh: Mesh,
+              multi_pod: bool) -> CellProgram:
+    from ..models.bst import (bst_loss, bst_retrieval, bst_serve,
+                              init_bst_params)
+    cfg = spec.model_cfg
+    sp = spec.shapes[shape]
+    ctx = ShardCtx(mesh=mesh, dp=dp_axes(multi_pod), tp="model")
+    pshapes = _eval_params(functools.partial(init_bst_params, cfg=cfg))
+    pspecs = bst_param_specs(pshapes)
+    psh = named(mesh, pspecs, pshapes)
+    ispecs = spec.input_specs(shape)
+    bsh = named(mesh, batch_specs("recsys", sp.kind, ispecs, multi_pod),
+                ispecs)
+    meta = {"family": "recsys", "kind": sp.kind, "n_params": cfg.n_params,
+            "n_active_params": cfg.n_params, "dims": dict(sp.dims)}
+
+    if sp.kind == "rec_train":
+        opt_cfg = AdamWConfig()
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        osh = named(mesh, opt_state_specs(pspecs), oshapes)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: bst_loss(p, batch, cfg, ctx),
+                has_aux=True)(params)
+            new_p, new_o, om = adamw_update(opt_cfg, grads, opt_state,
+                                            params)
+            metrics = dict(metrics)
+            metrics.update(om)
+            return new_p, new_o, metrics
+
+        return CellProgram(
+            name=f"{spec.name}:{shape}", fn=train_step,
+            args=(pshapes, oshapes, ispecs),
+            in_shardings=(psh, osh, bsh), out_shardings=(psh, osh, None),
+            meta=meta)
+
+    if sp.kind == "rec_serve":
+        def step(params, batch):
+            return bst_serve(params, batch, cfg, ctx)
+
+        return CellProgram(
+            name=f"{spec.name}:{shape}", fn=step,
+            args=(pshapes, ispecs), in_shardings=(psh, bsh),
+            out_shardings=None, meta=meta)
+
+    def step(params, batch):
+        return bst_retrieval(params, batch["hist"], batch["user_feats"],
+                             batch["cand_ids"], cfg, ctx)
+
+    return CellProgram(
+        name=f"{spec.name}:{shape}", fn=step,
+        args=(pshapes, ispecs), in_shardings=(psh, bsh),
+        out_shardings=None, meta=meta)
+
+
+# --------------------------------------------------------------------------
+# BENU cell (the paper's technique)
+# --------------------------------------------------------------------------
+
+
+def _benu_cell(spec: ArchSpec, shape: str, mesh: Mesh,
+               multi_pod: bool) -> CellProgram:
+    from ..core.engine_dist import build_distributed_step
+    from ..core.estimate import GraphStats
+    from ..core.pattern import get_pattern
+    from ..core.plangen import generate_best_plan
+    from ..distributed.rowstore import RowStoreSpec
+    cfg = spec.model_cfg
+    sp = spec.shapes[shape]
+    d = sp.dims
+    axis = flat_axes(multi_pod)
+    n_shards = 1
+    for a in axis:
+        n_shards *= mesh.shape[a]
+    rps = -(-(cfg.n_vertices + 1) // n_shards)
+    store = RowStoreSpec(n=cfg.n_vertices, d=cfg.row_width,
+                         n_shards=n_shards, rows_per_shard=rps, hot=cfg.hot)
+    stats = GraphStats(n_vertices=cfg.n_vertices,
+                       n_edges=cfg.n_vertices * 16)
+    plan = generate_best_plan(get_pattern(cfg.pattern), stats)
+    n_enu = sum(1 for i in plan.instrs if i.op == "ENU")
+    caps = [cfg.batch_per_shard * cfg.cap_mult[min(i, len(cfg.cap_mult) - 1)]
+            for i in range(n_enu)]
+    caps = [-(-c // n_shards) * n_shards for c in caps]
+    step = build_distributed_step(plan, store, mesh, axis, caps,
+                                  cfg.req_cap, rebalance=True)
+    ispecs = spec.input_specs(shape)
+    # re-derive specs against the actual mesh shard count
+    ispecs = {
+        "shards": jax.ShapeDtypeStruct((n_shards, rps, cfg.row_width),
+                                       jnp.int32),
+        "hot_rows": jax.ShapeDtypeStruct((cfg.hot + 1, cfg.row_width),
+                                         jnp.int32),
+        "starts": jax.ShapeDtypeStruct((n_shards * cfg.batch_per_shard,),
+                                       jnp.int32),
+        "starts_valid": jax.ShapeDtypeStruct(
+            (n_shards * cfg.batch_per_shard,), jnp.bool_),
+    }
+    bspec = batch_specs("benu", sp.kind, ispecs, multi_pod)
+    bsh = {k: NamedSharding(mesh, v) for k, v in bspec.items()}
+
+    def fn(shards, hot_rows, starts, starts_valid):
+        return step(shards, hot_rows, starts, starts_valid)
+
+    return CellProgram(
+        name=f"benu:{shape}", fn=fn,
+        args=(ispecs["shards"], ispecs["hot_rows"], ispecs["starts"],
+              ispecs["starts_valid"]),
+        in_shardings=(bsh["shards"], bsh["hot_rows"], bsh["starts"],
+                      bsh["starts_valid"]),
+        out_shardings=None,
+        meta={"family": "benu", "kind": sp.kind, "n_params": 0,
+              "n_active_params": 0, "dims": dict(d),
+              "plan": plan.pretty(), "caps": caps})
+
+
+# --------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               multi_pod: bool = False,
+               sharding_mode: str = "fsdp") -> CellProgram:
+    spec = get_config(arch)
+    if spec.family == "lm":
+        return _lm_cell(spec, shape, mesh, multi_pod,
+                        sharding_mode=sharding_mode)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape, mesh, multi_pod)
+    if spec.family == "recsys":
+        return _rec_cell(spec, shape, mesh, multi_pod)
+    if spec.family == "benu":
+        return _benu_cell(spec, shape, mesh, multi_pod)
+    raise KeyError(spec.family)

@@ -1,0 +1,294 @@
+"""Attention layers: GQA (with optional QKV bias) and MLA (DeepSeek-V2),
+with training, prefill and KV-cache decode paths.
+
+Implementation notes
+--------------------
+* ``blockwise_attention`` is the jnp flash formulation (online softmax over
+  KV chunks via lax.scan): linear memory in sequence length, so the 32k
+  prefill cells lower/compile without a [T, T] score buffer even on the CPU
+  dry-run backend. On TPU the Pallas kernel takes over (kernels/ops.py).
+* Decode attends a [B, S, ...] cache with one new token; a softmax over a
+  *sharded* S axis compiles to per-shard partials + all-reduce (max / sum) —
+  i.e. XLA's SPMD partitioner derives flash-decode for the long_500k cell.
+* MLA decode uses the matrix-absorption trick: scores are computed directly
+  in the compressed latent space, so the cache stays [B, S, r + rope]
+  (the whole point of MLA).
+
+Layouts: activations [B, T, H, d]; caches [B, S, H_kv, d] (GQA) or
+[B, S, r] + [B, S, rope] (MLA).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .common import ShardCtx, dense_init, rmsnorm, split_keys
+from .rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Core attention math
+# --------------------------------------------------------------------------
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, block: int = 1024,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Online-softmax attention. q: [B, Tq, H, dq]; k: [B, Tk, H, dq];
+    v: [B, Tk, H, dv]. Heads must already be expanded/grouped equal."""
+    b, tq, h, dq = q.shape
+    tk, dv = k.shape[1], v.shape[-1]
+    if scale is None:
+        scale = dq ** -0.5
+    block = min(block, tk)
+    pad = (-tk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (tk + pad) // block
+    kb = jnp.moveaxis(k.reshape(b, nb, block, h, dq), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block, h, dv), 1, 0)
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(tq) + (tk - tq)          # global positions of queries
+
+    def step(carry, xs):
+        m, l, acc, j = carry
+        kj, vj = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(jnp.float32)) * scale
+        kpos = j * block + jnp.arange(block)
+        mask = kpos[None, :] < tk              # padding
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new, j + 1), None
+
+    m0 = jnp.full((b, h, tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, tq), jnp.float32)
+    acc0 = jnp.zeros((b, h, tq, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, 0), (kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).astype(q.dtype)
+    return jnp.moveaxis(out, 1, 2)             # [B, Tq, H, dv]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-step GQA decode. q: [B, 1, Hq, d]; caches [B, S, Hkv, d];
+    ``length``: number of valid cache entries (scalar or [B]).
+
+    The q heads are *grouped* against the unexpanded KV cache
+    (einsum over [B,1,Hkv,G,d] x [B,S,Hkv,d]) — never broadcast/reshape
+    the cache itself: with a sequence-sharded cache, an expanded-KV
+    broadcast defeats the SPMD partitioner ("involuntary full
+    rematerialization") and all-gathers the entire cache per layer
+    (measured 18 GiB x n_layers on long_500k; EXPERIMENTS.md §4.4).
+    The softmax over the sharded S axis compiles to partial max/sum +
+    all-reduce — flash-decode, derived by XLA."""
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qg = q.reshape(b, 1, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos[None, :] < jnp.reshape(length, (-1, 1))    # [B, S]
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def _expand_kv(x: jax.Array, groups: int) -> jax.Array:
+    """[B, T, Hkv, d] -> [B, T, Hkv*groups, d] by repeat."""
+    if groups == 1:
+        return x
+    b, t, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, t, h, groups, d)
+                            ).reshape(b, t, h * groups, d)
+
+
+def full_attention(q, k, v, causal=True, impl: str = "auto",
+                   scale=None) -> jax.Array:
+    """Dispatch: Pallas flash kernel on TPU, blockwise jnp elsewhere.
+    q/k/v: [B, T, H, d] (equal heads)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "blockwise"
+    if impl == "pallas" or impl == "interpret":
+        qt = jnp.moveaxis(q, 2, 1)
+        kt = jnp.moveaxis(k, 2, 1)
+        vt = jnp.moveaxis(v, 2, 1)
+        out = kops.flash_attention(qt, kt, vt, causal=causal, scale=scale,
+                                   impl=impl)
+        return jnp.moveaxis(out, 1, 2)
+    return blockwise_attention(q, k, v, causal=causal, scale=scale)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer
+# --------------------------------------------------------------------------
+
+
+def gqa_params(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+               qkv_bias: bool, dtype) -> Dict:
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": dense_init(ks["wq"], (d_model, n_heads * d_head), dtype),
+        "wk": dense_init(ks["wk"], (d_model, n_kv * d_head), dtype),
+        "wv": dense_init(ks["wv"], (d_model, n_kv * d_head), dtype),
+        "wo": dense_init(ks["wo"], (n_heads * d_head, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), dtype)
+        p["bk"] = jnp.zeros((n_kv * d_head,), dtype)
+        p["bv"] = jnp.zeros((n_kv * d_head,), dtype)
+    return p
+
+
+def gqa_attention(p: Dict, x: jax.Array, positions: jax.Array,
+                  cfg, ctx: ShardCtx,
+                  cache: Optional[Dict] = None,
+                  attn_impl: str = "auto"
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: [B, T, D]. With ``cache`` (decode): T == 1; cache = {k, v, length};
+    returns (out [B, T, D], updated cache or None)."""
+    b, t, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("btd,df->btf", x, p["wq"])
+    k = jnp.einsum("btd,df->btf", x, p["wk"])
+    v = jnp.einsum("btd,df->btf", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = ctx.shard(q.reshape(b, t, h, dh), ctx.dp, None, ctx.tp, None)
+    k = k.reshape(b, t, kvh, dh)
+    v = v.reshape(b, t, kvh, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        length = cache["length"]
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
+        out = decode_attention(q, k_cache, v_cache, length + t)
+        new_cache = {"k": k_cache, "v": v_cache, "length": length + t}
+    else:
+        kx = _expand_kv(k, h // kvh)
+        vx = _expand_kv(v, h // kvh)
+        out = full_attention(q, kx, vx, causal=True, impl=attn_impl)
+        new_cache = None
+    out = out.reshape(b, t, h * dh)
+    out = jnp.einsum("btf,fd->btd", out, p["wo"])
+    return ctx.shard(out, ctx.dp, None, None), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA attention layer (DeepSeek-V2-Lite: no q compression)
+# --------------------------------------------------------------------------
+
+
+def mla_params(key, d_model: int, n_heads: int, kv_lora: int,
+               qk_nope: int, qk_rope: int, v_dim: int, dtype) -> Dict:
+    ks = split_keys(key, ["wq", "wkv_a", "wkv_b", "wo", "norm_ckv"])
+    return {
+        "wq": dense_init(ks["wq"], (d_model, n_heads * (qk_nope + qk_rope)),
+                         dtype),
+        "wkv_a": dense_init(ks["wkv_a"], (d_model, kv_lora + qk_rope),
+                            dtype),
+        "wkv_b": dense_init(ks["wkv_b"], (kv_lora, n_heads *
+                                          (qk_nope + v_dim)), dtype),
+        "wo": dense_init(ks["wo"], (n_heads * v_dim, d_model), dtype),
+        "norm_ckv": jnp.ones((kv_lora,), dtype),
+    }
+
+
+def mla_attention(p: Dict, x: jax.Array, positions: jax.Array,
+                  cfg, ctx: ShardCtx,
+                  cache: Optional[Dict] = None,
+                  attn_impl: str = "auto"
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    r, nope, rope_d, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                           cfg.qk_rope_dim, cfg.v_head_dim)
+    scale = (nope + rope_d) ** -0.5
+
+    q = jnp.einsum("btd,df->btf", x, p["wq"]).reshape(b, t, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("btd,df->btf", x, p["wkv_a"])
+    c_kv = rmsnorm(kv_a[..., :r], p["norm_ckv"])
+    k_rope = apply_rope(kv_a[..., None, r:], positions, cfg.rope_theta)
+
+    wkv_b = p["wkv_b"].reshape(r, h, nope + vd)
+    wk_b, wv_b = wkv_b[..., :nope], wkv_b[..., nope:]
+
+    if cache is not None:
+        length = cache["length"]
+        ckv_cache = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, length, 0))
+        krope_cache = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(
+                cache["k_rope"].dtype), (0, length, 0))
+        # -- absorbed decode: score in latent space
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                           wk_b.astype(jnp.float32))
+        s = jnp.einsum("bthr,bsr->bhts", q_lat,
+                       ckv_cache.astype(jnp.float32))
+        s = s + jnp.einsum("bthc,bsc->bhts", q_rope.astype(jnp.float32),
+                           krope_cache.astype(jnp.float32))
+        s = s * scale
+        kpos = jnp.arange(ckv_cache.shape[1])
+        mask = kpos[None, :] < jnp.reshape(length + t, (-1, 1))
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bhts,bsr->bthr", pr,
+                             ckv_cache.astype(jnp.float32))
+        out = jnp.einsum("bthr,rhv->bthv", ctx_lat,
+                         wv_b.astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"c_kv": ckv_cache, "k_rope": krope_cache,
+                     "length": length + t}
+    else:
+        # -- expanded train/prefill
+        k_nope = jnp.einsum("btr,rhn->bthn", c_kv, wk_b)
+        vv = jnp.einsum("btr,rhv->bthv", c_kv, wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, t, h, rope_d))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qq = ctx.shard(qq, ctx.dp, None, ctx.tp, None)
+        out = full_attention(qq, k, vv, causal=True, impl=attn_impl,
+                             scale=scale)
+        new_cache = None
+    out = out.reshape(b, t, h * vd)
+    out = jnp.einsum("btf,fd->btd", out, p["wo"])
+    return ctx.shard(out, ctx.dp, None, None), new_cache
+
+
+def init_gqa_cache(b: int, s_max: int, n_kv: int, d_head: int, dtype):
+    return {"k": jnp.zeros((b, s_max, n_kv, d_head), dtype),
+            "v": jnp.zeros((b, s_max, n_kv, d_head), dtype),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def init_mla_cache(b: int, s_max: int, kv_lora: int, qk_rope: int, dtype):
+    return {"c_kv": jnp.zeros((b, s_max, kv_lora), dtype),
+            "k_rope": jnp.zeros((b, s_max, qk_rope), dtype),
+            "length": jnp.zeros((), jnp.int32)}

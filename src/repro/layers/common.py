@@ -1,0 +1,118 @@
+"""Shared layer utilities: sharding context, init helpers, norms.
+
+The model code is framework-free (pure params-pytree + functions). Sharding
+is expressed through a :class:`ShardCtx` — a thin wrapper over
+``jax.lax.with_sharding_constraint`` that becomes a no-op when no mesh is
+active (CPU smoke tests) and applies :class:`~jax.sharding.NamedSharding`
+constraints during pjit tracing (dry-run / production).
+
+Axis conventions (see launch/mesh.py):
+    dp axes   — batch-parallel axes ("data", plus "pod" when multi-pod)
+    tp axis   — "model" (tensor/TP, experts, vocab, KV-sequence in decode)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ops as kops
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + axis naming used by model code for activation constraints."""
+
+    mesh: Optional[Mesh] = None
+    dp: Axis = None        # batch axes, e.g. ("pod", "data") or "data"
+    tp: Axis = None        # model axis
+
+    def shard(self, x: jax.Array, *axes: Axis) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*axes)))
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None or self.dp is None:
+            return 1
+        axes = (self.dp,) if isinstance(self.dp, str) else self.dp
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+NO_SHARD = ShardCtx()
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: Optional[float] = None):
+    """LeCun-normal (fan-in) init used across the stack."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def split_keys(key, names: Sequence[str]):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return kops.rmsnorm(x, gamma, eps=eps)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+def swish(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------------
+# Cross entropy (vocab-sharding friendly)
+# --------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          z_loss: float = 0.0):
+    """Mean CE over all positions; logits [.., V] f32-accumulated.
+
+    Written as logsumexp - label logit so XLA keeps the reduction local to
+    vocab shards (one psum), never materializing the softmax.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse ** 2)
+    return loss

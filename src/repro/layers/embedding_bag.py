@@ -1,0 +1,68 @@
+"""EmbeddingBag: multi-hot gather-reduce over huge sparse tables.
+
+JAX has no native ``nn.EmbeddingBag`` (taxonomy §RecSys) — this is the
+``jnp.take`` + ``jax.ops.segment_sum`` construction, padded-id aware. Tables
+are row-sharded over the "model" axis in production (the DistributedRowStore
+idea applied to embeddings); XLA turns the gather into the appropriate
+collective.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array,
+                     pad_id: Optional[int] = None) -> jax.Array:
+    """Row gather with optional padding id -> zero vector. ids: any shape."""
+    out = jnp.take(table, jnp.clip(ids, 0, table.shape[0] - 1), axis=0)
+    if pad_id is not None:
+        out = jnp.where((ids == pad_id)[..., None], 0.0, out)
+    return out
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  segment_ids: jax.Array, num_segments: int,
+                  mode: str = "sum", pad_id: Optional[int] = None,
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """Ragged bag-reduce: rows ``table[ids]`` reduced per ``segment_ids``.
+
+    ids, segment_ids: int32[L] (flattened ragged bags); returns
+    [num_segments, dim]. ``mode``: sum | mean | max.
+    """
+    rows = embedding_lookup(table, ids, pad_id=pad_id)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    if mode == "max":
+        neg = jnp.full_like(rows, -jnp.inf)
+        rows = jnp.where((ids == pad_id)[..., None], neg, rows) \
+            if pad_id is not None else rows
+        out = jax.ops.segment_max(rows, segment_ids,
+                                  num_segments=num_segments)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    out = jax.ops.segment_sum(rows, segment_ids,
+                              num_segments=num_segments)
+    if mode == "mean":
+        valid = jnp.ones_like(ids, jnp.float32)
+        if pad_id is not None:
+            valid = jnp.where(ids == pad_id, 0.0, valid)
+        cnt = jax.ops.segment_sum(valid, segment_ids,
+                                  num_segments=num_segments)
+        out = out / jnp.maximum(cnt, 1.0)[..., None]
+    return out
+
+
+def embedding_bag_fixed(table: jax.Array, ids: jax.Array,
+                        mode: str = "mean",
+                        pad_id: Optional[int] = None) -> jax.Array:
+    """Dense-rectangular bags: ids [B, L] -> [B, dim] (pad-aware mean/sum)."""
+    rows = embedding_lookup(table, ids, pad_id=pad_id)       # [B, L, d]
+    if mode == "sum":
+        return jnp.sum(rows, axis=1)
+    valid = jnp.ones(ids.shape, jnp.float32) if pad_id is None else \
+        (ids != pad_id).astype(jnp.float32)
+    s = jnp.sum(rows, axis=1)
+    return s / jnp.maximum(jnp.sum(valid, axis=1), 1.0)[..., None]

@@ -1,0 +1,50 @@
+"""Dense FFN blocks: SwiGLU (LLaMA-style gated) MLP."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, dense_init, split_keys, swish
+
+
+def swiglu_params(key, d_model: int, d_ff: int, dtype) -> Dict:
+    ks = split_keys(key, ["gate", "up", "down"])
+    return {
+        "w_gate": dense_init(ks["gate"], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks["up"], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks["down"], (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p: Dict, x: jax.Array, ctx: ShardCtx) -> jax.Array:
+    h = swish(jnp.einsum("btd,df->btf", x, p["w_gate"]))
+    h = h * jnp.einsum("btd,df->btf", x, p["w_up"])
+    h = ctx.shard(h, ctx.dp, None, ctx.tp)
+    out = jnp.einsum("btf,fd->btd", h, p["w_down"])
+    return ctx.shard(out, ctx.dp, None, None)
+
+
+def mlp_params(key, sizes, dtype, bias: bool = True) -> Dict:
+    """Plain ReLU MLP tower (recsys / GNN substrate). sizes = [in, h1, .., out]."""
+    ps = {}
+    keys = jax.random.split(key, len(sizes) - 1)
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        ps[f"w{i}"] = dense_init(keys[i], (a, b), dtype)
+        if bias:
+            ps[f"b{i}"] = jnp.zeros((b,), dtype)
+    return ps
+
+
+def mlp_apply(p: Dict, x: jax.Array, act=jax.nn.relu,
+              final_act: bool = False) -> jax.Array:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = jnp.einsum("...a,ab->...b", x, p[f"w{i}"])
+        if f"b{i}" in p:
+            x = x + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,30 @@
+"""Rotary position embeddings (RoPE), plus the decoupled-RoPE split used by
+MLA (DeepSeek-V2): only the `rope` slice of each head is rotated."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(d: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies [d/2] (f32)."""
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """Rotate pairs. x: [..., T, H, d] (or [..., T, d]); positions: [..., T].
+
+    Pairing convention: (x[..., :d/2], x[..., d/2:]) halves (NeoX style).
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                          # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., T, d/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == ang.ndim + 1:                          # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,292 @@
+"""The four assigned GNN architectures over the segment-sum substrate.
+
+    gin-tu          GIN (sum aggregator, learnable eps), 5 x 64
+    pna             Principal Neighbourhood Aggregation: {mean,max,min,std}
+                    x {identity, amplification, attenuation}, 4 x 75
+    egnn            E(n)-equivariant GNN (scalar-distance messages +
+                    coordinate updates), 4 x 64
+    meshgraphnet    encode-process-decode with edge+node MLP blocks, 15 x 128
+
+All message passing is `gather(src) -> edge compute -> segment_sum(dst)`;
+padded edges scatter into a dropped extra segment. Distribution (full-batch
+cells): edge arrays are sharded over the combined data axes, node tensors
+replicated — each device scatters its edge shard and XLA inserts one
+all-reduce per layer (see DESIGN.md §6; the ogb_products hillclimb attacks
+exactly this collective).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.common import ShardCtx, dense_init, layernorm, split_keys
+from ..layers.mlp import mlp_apply, mlp_params
+
+
+def _ln_params(d: int, dtype) -> Dict:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(p: Dict, x: jax.Array) -> jax.Array:
+    return layernorm(x, p["g"], p["b"])
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                  # gin | pna | egnn | mgn
+    n_layers: int
+    d_hidden: int
+    d_feat: int
+    n_out: int                 # classes or regression dims
+    task: str = "node_class"   # node_class | graph_class | node_reg
+    d_edge: int = 0            # mgn edge-feature dim
+    mlp_layers: int = 2
+    dtype: Any = jnp.float32
+    shard_nodes: bool = False  # 1D node partition over ctx.tp (big graphs)
+    remat: bool = False        # recompute layer internals in backward
+
+    @property
+    def n_params(self) -> int:
+        import numpy as np
+        # counted exactly from an abstract init
+        params = jax.eval_shape(lambda k: init_gnn_params(k, self),
+                                jax.random.PRNGKey(0))
+        return int(sum(int(np.prod(l.shape))
+                       for l in jax.tree.leaves(params)))
+
+
+# --------------------------------------------------------------------------
+# Message-passing primitives
+# --------------------------------------------------------------------------
+
+
+def gather_src(h: jax.Array, src: jax.Array, n: int) -> jax.Array:
+    """h: [N, d]; src: [E] with sentinel == n -> zeros row."""
+    hp = jnp.concatenate([h, jnp.zeros((1,) + h.shape[1:], h.dtype)], axis=0)
+    return hp[jnp.clip(src, 0, n)]
+
+
+def scatter_sum(msg: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+    return jax.ops.segment_sum(msg, jnp.clip(dst, 0, n),
+                               num_segments=n + 1)[:n]
+
+
+def scatter_max(msg: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+    out = jax.ops.segment_max(msg, jnp.clip(dst, 0, n),
+                              num_segments=n + 1)[:n]
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def scatter_min(msg: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+    out = jax.ops.segment_min(msg, jnp.clip(dst, 0, n),
+                              num_segments=n + 1)[:n]
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def in_degree(dst: jax.Array, n: int, emask: jax.Array) -> jax.Array:
+    return jax.ops.segment_sum(emask.astype(jnp.float32),
+                               jnp.clip(dst, 0, n), num_segments=n + 1)[:n]
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_gnn_params(key, cfg: GNNConfig) -> Dict:
+    ks = split_keys(key, ["enc", "enc_e", "layers", "dec"])
+    d = cfg.d_hidden
+    p: Dict = {"enc": mlp_params(ks["enc"], [cfg.d_feat, d, d], cfg.dtype)}
+    lk = jax.random.split(ks["layers"], cfg.n_layers)
+    layers = []
+    for k in lk:
+        kk = split_keys(k, ["a", "b", "c"])
+        if cfg.kind == "gin":
+            lp = {"mlp": mlp_params(kk["a"], [d, d, d], cfg.dtype),
+                  "eps": jnp.zeros((), cfg.dtype),
+                  "ln": _ln_params(d, cfg.dtype)}
+        elif cfg.kind == "pna":
+            lp = {"pre": mlp_params(kk["a"], [2 * d, d], cfg.dtype),
+                  "post": mlp_params(kk["b"], [13 * d, d], cfg.dtype)}
+        elif cfg.kind == "egnn":
+            lp = {"phi_e": mlp_params(kk["a"], [2 * d + 1, d, d], cfg.dtype),
+                  "phi_x": mlp_params(kk["b"], [d, d, 1], cfg.dtype),
+                  "phi_h": mlp_params(kk["c"], [2 * d, d, d], cfg.dtype)}
+        elif cfg.kind == "mgn":
+            lp = {"edge_mlp": mlp_params(kk["a"], [3 * d, d, d], cfg.dtype),
+                  "node_mlp": mlp_params(kk["b"], [2 * d, d, d], cfg.dtype),
+                  "edge_ln": _ln_params(d, cfg.dtype),
+                  "node_ln": _ln_params(d, cfg.dtype)}
+        else:
+            raise ValueError(cfg.kind)
+        layers.append(lp)
+    p["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    if cfg.kind == "mgn":
+        p["enc_e"] = mlp_params(ks["enc_e"], [cfg.d_edge, d, d], cfg.dtype)
+    p["dec"] = mlp_params(ks["dec"], [d, d, cfg.n_out], cfg.dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Layer bodies
+# --------------------------------------------------------------------------
+
+
+def _gin_layer(lp, h, e_src, e_dst, emask, n, ctx, node_axis=None):
+    hs = gather_src(h, e_src, n)
+    hs = ctx.shard(hs, ctx.dp, None)
+    agg = scatter_sum(hs, e_dst, n)
+    agg = ctx.shard(agg, node_axis, None)
+    out = mlp_apply(lp["mlp"], (1.0 + lp["eps"]) * h + agg,
+                    act=jax.nn.relu, final_act=True)
+    # GIN-TU uses BatchNorm between layers; LayerNorm is the distribution-
+    # friendly substitute (no cross-device batch stats) — noted in DESIGN.md
+    return _ln(lp["ln"], out)
+
+
+def _pna_layer(lp, h, e_src, e_dst, emask, n, ctx,
+               node_axis=None, delta: float = 2.0):
+    hs = gather_src(h, e_src, n)
+    hd = gather_src(h, e_dst, n)
+    m = mlp_apply(lp["pre"], jnp.concatenate([hs, hd], axis=-1))
+    m = jnp.where(emask[:, None], m, 0.0)
+    m = ctx.shard(m, ctx.dp, None)
+    deg = jnp.maximum(in_degree(e_dst, n, emask), 1.0)
+    s_sum = scatter_sum(m, e_dst, n)
+    mean = s_sum / deg[:, None]
+    mx = scatter_max(jnp.where(emask[:, None], m, -jnp.inf), e_dst, n)
+    mn = scatter_min(jnp.where(emask[:, None], m, jnp.inf), e_dst, n)
+    sq = scatter_sum(m * m, e_dst, n) / deg[:, None]
+    std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-8)
+    aggs = [mean, mx, mn, std]
+    logd = jnp.log(deg + 1.0)[:, None]
+    scaled = []
+    for a in aggs:
+        scaled += [a, a * logd / delta, a * delta / logd]
+    out = mlp_apply(lp["post"],
+                    jnp.concatenate([h] + scaled, axis=-1))
+    return h + out
+
+
+def _egnn_layer(lp, h, x, e_src, e_dst, emask, n, ctx, node_axis=None):
+    hs, hd = gather_src(h, e_src, n), gather_src(h, e_dst, n)
+    xs, xd = gather_src(x, e_src, n), gather_src(x, e_dst, n)
+    diff = xd - xs
+    r2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+    m = mlp_apply(lp["phi_e"], jnp.concatenate([hd, hs, r2], axis=-1),
+                  act=jax.nn.silu, final_act=True)
+    m = jnp.where(emask[:, None], m, 0.0)
+    m = ctx.shard(m, ctx.dp, None)
+    w = mlp_apply(lp["phi_x"], m, act=jax.nn.silu)               # [E, 1]
+    deg = jnp.maximum(in_degree(e_dst, n, emask), 1.0)[:, None]
+    x_new = x + scatter_sum(diff * w, e_dst, n) / deg
+    agg = scatter_sum(m, e_dst, n)
+    h_new = h + mlp_apply(lp["phi_h"],
+                          jnp.concatenate([h, agg], axis=-1),
+                          act=jax.nn.silu)
+    return h_new, x_new
+
+
+def _mgn_layer(lp, h, e_feat, e_src, e_dst, emask, n, ctx,
+               node_axis=None):
+    hs, hd = gather_src(h, e_src, n), gather_src(h, e_dst, n)
+    e_new = _ln(lp["edge_ln"], mlp_apply(
+        lp["edge_mlp"], jnp.concatenate([e_feat, hs, hd], axis=-1),
+        act=jax.nn.relu)) + e_feat
+    e_new = jnp.where(emask[:, None], e_new, 0.0)
+    e_new = ctx.shard(e_new, ctx.dp, None)
+    agg = scatter_sum(e_new, e_dst, n)
+    h_new = _ln(lp["node_ln"], mlp_apply(
+        lp["node_mlp"], jnp.concatenate([h, agg], axis=-1),
+        act=jax.nn.relu)) + h
+    return h_new, e_new
+
+
+# --------------------------------------------------------------------------
+# Forward + loss
+# --------------------------------------------------------------------------
+
+
+def gnn_forward(params: Dict, batch: Dict, cfg: GNNConfig,
+                ctx: ShardCtx = ShardCtx()) -> jax.Array:
+    n = batch["x"].shape[0]
+    # node-tensor placement: replicated by default; 1D partition over the
+    # model axis for full-batch-large graphs (ogb_products) — per-layer
+    # node state then costs N*d/16 per device instead of N*d (the
+    # replicated layout peaks at 151 GiB/device on meshgraphnet;
+    # EXPERIMENTS.md §Perf)
+    node_axis = ctx.tp if cfg.shard_nodes else None
+    e_src = ctx.shard(batch["edge_src"], ctx.dp)
+    e_dst = ctx.shard(batch["edge_dst"], ctx.dp)
+    emask = e_src < n
+    h = mlp_apply(params["enc"], batch["x"].astype(cfg.dtype),
+                  act=jax.nn.relu, final_act=True)
+    h = h * batch["node_mask"][:, None].astype(h.dtype)
+    h = ctx.shard(h, node_axis, None)
+
+    if cfg.kind == "egnn":
+        x = batch["pos"].astype(cfg.dtype)
+
+        def body(carry, lp):
+            hh, xx = carry
+            hh, xx = _egnn_layer(lp, hh, xx, e_src, e_dst, emask, n, ctx,
+                                 node_axis)
+            return (ctx.shard(hh, node_axis, None), xx), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, x), _ = jax.lax.scan(body, (h, x), params["layers"])
+    elif cfg.kind == "mgn":
+        ef = mlp_apply(params["enc_e"], batch["edge_attr"].astype(cfg.dtype),
+                       act=jax.nn.relu, final_act=True)
+        ef = jnp.where(emask[:, None], ef, 0.0)
+
+        def body(carry, lp):
+            hh, ee = carry
+            hh, ee = _mgn_layer(lp, hh, ee, e_src, e_dst, emask, n, ctx,
+                                node_axis)
+            return (ctx.shard(hh, node_axis, None), ee), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, _), _ = jax.lax.scan(body, (h, ef), params["layers"])
+    else:
+        layer = _gin_layer if cfg.kind == "gin" else _pna_layer
+
+        def body(hh, lp):
+            out = layer(lp, hh, e_src, e_dst, emask, n, ctx, node_axis)
+            return ctx.shard(out, node_axis, None), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+
+    if cfg.task == "graph_class":
+        gid = batch["graph_ids"]
+        ng = int(batch["loss_mask"].shape[0])
+        pooled = jax.ops.segment_sum(h, gid, num_segments=ng)
+        return mlp_apply(params["dec"], pooled)
+    return mlp_apply(params["dec"], h)
+
+
+def gnn_loss(params: Dict, batch: Dict, cfg: GNNConfig,
+             ctx: ShardCtx = ShardCtx()):
+    out = gnn_forward(params, batch, cfg, ctx)
+    mask = batch["loss_mask"].astype(jnp.float32)
+    if cfg.task in ("node_class", "graph_class"):
+        logits = out.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, batch["labels"][..., None],
+                                 axis=-1)[..., 0]
+        loss = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        acc = jnp.sum((jnp.argmax(logits, -1) == batch["labels"]) * mask) \
+            / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss, {"loss": loss, "acc": acc}
+    err = (out.astype(jnp.float32) - batch["targets"]) ** 2
+    loss = jnp.sum(err * mask[:, None]) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}

@@ -1,0 +1,308 @@
+"""Decoder-only transformer LM covering the five assigned LM architectures.
+
+One parameterized implementation spans:
+    phi4-mini-3.8b      dense, GQA(24/8), RoPE, SwiGLU, 200k vocab
+    qwen2-0.5b          dense, GQA(14/2), QKV bias
+    qwen2.5-3b          dense, GQA(16/2), QKV bias
+    deepseek-v2-lite    MoE (64 routed top-6 + 2 shared), MLA attention
+    granite-moe-3b      MoE (40 routed top-8), GQA(24/8)
+
+Layers run under ``jax.lax.scan`` with stacked parameters (HLO stays O(1) in
+depth — essential for the 512-device dry-run compile) and optional remat.
+
+Step functions:
+    train_step     next-token CE (+ MoE aux loss), grads + AdamW update
+                   (built in train/update.py; here: loss_fn / forward)
+    prefill_step   full-sequence forward populating a KV cache
+    decode_step    one token with KV cache (decode_32k / long_500k cells)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.attention import (gqa_attention, gqa_params, init_gqa_cache,
+                                init_mla_cache, mla_attention, mla_params)
+from ..layers.common import (ShardCtx, dense_init, embed_init, rmsnorm,
+                             softmax_cross_entropy, split_keys)
+from ..layers.mlp import swiglu, swiglu_params
+from ..layers.moe import moe_ffn, moe_params
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    attn_kind: str = "gqa"              # gqa | mla
+    # MLA
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0          # leading dense layers (DeepSeek: 1)
+    capacity_factor: float = 1.25
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for roofline MODEL_FLOPS)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        if self.attn_kind == "mla":
+            attn = (d * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * self.n_heads
+                    * (self.qk_nope_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            attn = d * self.d_head * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * self.d_head * d
+        if self.moe:
+            ffn_moe = (d * self.n_experts + 3 * self.n_experts * d
+                       * self.moe_d_ff + 3 * d * self.moe_d_ff
+                       * self.n_shared)
+            ffn_dense = 3 * d * self.d_ff
+            ffn = (ffn_moe * (L - self.first_dense_layers)
+                   + ffn_dense * self.first_dense_layers) / L
+        else:
+            ffn = 3 * d * self.d_ff
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return int(L * (attn + ffn + 2 * d) + emb + d)
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k of routed + shared)."""
+        if not self.moe:
+            return self.n_params
+        d, L = self.d_model, self.n_layers
+        if self.attn_kind == "mla":
+            attn = (d * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * self.n_heads
+                    * (self.qk_nope_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            attn = d * self.d_head * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * self.d_head * d
+        ffn_act = (d * self.n_experts
+                   + 3 * self.top_k * d * self.moe_d_ff
+                   + 3 * d * self.moe_d_ff * self.n_shared)
+        ffn_dense = 3 * d * self.d_ff
+        ffn = (ffn_act * (L - self.first_dense_layers)
+               + ffn_dense * self.first_dense_layers) / L
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return int(L * (attn + ffn + 2 * d) + emb + d)
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+
+def _layer_params(key, cfg: LMConfig, moe_layer: bool) -> Dict:
+    ks = split_keys(key, ["attn", "ffn", "n1", "n2"])
+    if cfg.attn_kind == "mla":
+        attn = mla_params(ks["attn"], cfg.d_model, cfg.n_heads,
+                          cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                          cfg.v_head_dim, cfg.dtype)
+    else:
+        attn = gqa_params(ks["attn"], cfg.d_model, cfg.n_heads,
+                          cfg.n_kv_heads, cfg.d_head, cfg.qkv_bias,
+                          cfg.dtype)
+    if moe_layer:
+        ffn = moe_params(ks["ffn"], cfg.d_model, cfg.n_experts,
+                         cfg.moe_d_ff, cfg.n_shared, cfg.dtype)
+    else:
+        ffn = swiglu_params(ks["ffn"], cfg.d_model, cfg.d_ff, cfg.dtype)
+    return {"attn": attn, "ffn": ffn,
+            "norm1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "norm2": jnp.ones((cfg.d_model,), cfg.dtype)}
+
+
+def init_params(key, cfg: LMConfig) -> Dict:
+    """Stacked-layer params. MoE models with leading dense layers keep two
+    stacks (dense prefix + moe body) so each scans independently."""
+    ks = split_keys(key, ["embed", "head", "layers", "final"])
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+    params: Dict = {
+        "embed": embed_init(ks["embed"], (cfg.vocab, cfg.d_model),
+                            cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks["head"],
+                                       (cfg.d_model, cfg.vocab), cfg.dtype)
+    lk = jax.random.split(ks["layers"], cfg.n_layers)
+
+    def stack(keys, moe_layer):
+        layers = [_layer_params(k, cfg, moe_layer) for k in keys]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    if n_dense > 0:
+        params["dense_layers"] = stack(lk[:n_dense], False)
+    if n_moe > 0:
+        params["moe_layers"] = stack(lk[n_dense:], True)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _block(cfg: LMConfig, ctx: ShardCtx, moe_layer: bool, attn_impl: str):
+    attn_fn = mla_attention if cfg.attn_kind == "mla" else gqa_attention
+
+    def body(x, positions, lp, cache):
+        h, new_cache = attn_fn(lp["attn"], rmsnorm(x, lp["norm1"],
+                                                   cfg.norm_eps),
+                               positions, cfg, ctx, cache=cache,
+                               attn_impl=attn_impl)
+        x = x + h
+        hin = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if moe_layer:
+            h, aux = moe_ffn(lp["ffn"], hin, ctx, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor)
+        else:
+            h, aux = swiglu(lp["ffn"], hin, ctx), jnp.zeros((), jnp.float32)
+        return x + h, aux, new_cache
+
+    return body
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: LMConfig,
+            ctx: ShardCtx = ShardCtx(),
+            positions: Optional[jax.Array] = None,
+            caches: Optional[Dict] = None,
+            attn_impl: str = "auto"
+            ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """tokens [B, T] -> (logits [B, T, V], aux_loss, updated caches)."""
+    b, t = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = ctx.shard(x, ctx.dp, None, None)
+
+    new_caches: Dict = {}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_stack(x, stack_name, moe_layer):
+        nonlocal aux_total, new_caches
+        lp = params[stack_name]
+        body = _block(cfg, ctx, moe_layer, attn_impl)
+        if caches is not None:
+            # decode path: scan with cache carried per layer
+            cache_stack = caches[stack_name]
+
+            def step(carry, xs):
+                h = carry
+                layer_p, layer_cache = xs
+                h2, aux, c2 = body(h, positions, layer_p, layer_cache)
+                return h2, (aux, c2)
+
+            x, (auxs, cs) = jax.lax.scan(step, x, (lp, cache_stack))
+            new_caches[stack_name] = cs
+        else:
+            def step(carry, layer_p):
+                h2, aux, _ = body(carry, positions, layer_p, None)
+                return h2, aux
+
+            if cfg.remat:
+                step = jax.checkpoint(
+                    step, policy=jax.checkpoint_policies.nothing_saveable)
+            x, auxs = jax.lax.scan(step, x, lp)
+        aux_total = aux_total + jnp.sum(auxs)
+        return x
+
+    if "dense_layers" in params:
+        x = run_stack(x, "dense_layers", False)
+    if "moe_layers" in params:
+        x = run_stack(x, "moe_layers", True)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    logits = ctx.shard(logits, ctx.dp, None, ctx.tp)
+    return logits, aux_total, (new_caches if caches is not None else None)
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: LMConfig,
+            ctx: ShardCtx = ShardCtx(), attn_impl: str = "auto"):
+    logits, aux, _ = forward(params, batch["tokens"], cfg, ctx,
+                             attn_impl=attn_impl)
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_caches(cfg: LMConfig, b: int, s_max: int) -> Dict:
+    """Per-stack stacked caches matching init_params' layer stacks."""
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+
+    def one(n):
+        if cfg.attn_kind == "mla":
+            c = init_mla_cache(b, s_max, cfg.kv_lora_rank, cfg.qk_rope_dim,
+                               cfg.dtype)
+        else:
+            c = init_gqa_cache(b, s_max, cfg.n_kv_heads, cfg.d_head,
+                               cfg.dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(
+            x[None], (n,) + x.shape), c)
+
+    out = {}
+    if n_dense > 0:
+        out["dense_layers"] = one(n_dense)
+    if n_moe > 0:
+        out["moe_layers"] = one(n_moe)
+    return out
+
+
+def decode_step(params: Dict, caches: Dict, tokens: jax.Array,
+                position: jax.Array, cfg: LMConfig,
+                ctx: ShardCtx = ShardCtx()) -> Tuple[jax.Array, Dict]:
+    """One-token decode: tokens [B, 1], position scalar (cache length).
+
+    The caches carry ``length`` themselves; ``position`` feeds RoPE.
+    """
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(position, (b, 1))
+    logits, _, new_caches = forward(params, tokens, cfg, ctx,
+                                    positions=positions, caches=caches)
+    return logits[:, -1], new_caches
+
+
+def prefill_step(params: Dict, tokens: jax.Array, cfg: LMConfig,
+                 ctx: ShardCtx = ShardCtx(), attn_impl: str = "auto"
+                 ) -> jax.Array:
+    """Prefill forward (logits only; cache population elided in the
+    benchmark cell — the compute profile is the causal full-sequence pass)."""
+    logits, _, _ = forward(params, tokens, cfg, ctx, attn_impl=attn_impl)
+    return logits[:, -1]

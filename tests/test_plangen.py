@@ -1,0 +1,189 @@
+"""Execution-plan compiler tests (paper §4): raw plans, the three
+optimizations, VCBC, and the best-plan search — including a reproduction of
+the paper's running example (Fig. 2)."""
+
+import pytest
+
+from repro.core.estimate import GraphStats
+from repro.core.instructions import DBQ, ENU, INI, INT, RES, TRC, VG
+from repro.core.pattern import FAN5, UNDIRECTED_PATTERNS, get_pattern
+from repro.core.plangen import (apply_triangle_cache,
+                                common_subexpression_elimination,
+                                estimate_communication_cost,
+                                estimate_computation_cost,
+                                generate_best_plan, generate_optimized_plan,
+                                generate_raw_plan, reorder_instructions,
+                                search_matching_orders)
+from repro.core.symmetry import (check_unique_representative,
+                                 symmetry_breaking_constraints)
+
+# the paper's running example: fan5 with O: u1,u3,u5,u2,u6,u4 (0-based)
+FIG2_ORDER = (0, 2, 4, 1, 5, 3)
+
+
+def _well_formed(plan):
+    """All variables defined before use; one INI; RES last."""
+    defined = {VG}
+    assert plan.instrs[0].op == INI
+    assert plan.instrs[-1].op == RES
+    for ins in plan.instrs:
+        for v in ins.uses():
+            if v[0] == "op":
+                continue
+            assert v in defined or v[0] == "VG", \
+                f"{ins.pretty()} uses undefined {v}"
+        if ins.target is not None:
+            defined.add(ins.target)
+
+
+class TestRawPlan:
+    def test_fig2_raw_structure(self):
+        plan = generate_raw_plan(FAN5, FIG2_ORDER)
+        _well_formed(plan)
+        ops = plan.count_ops()
+        assert ops[ENU] == 5           # one per non-start vertex
+        assert ops[DBQ] >= 3           # A1, A3, A5 at least
+        assert ops[RES] == 1
+
+    def test_all_patterns_all_orders_well_formed(self):
+        import itertools
+        for name in ("triangle", "square", "chordal-square", "house"):
+            p = get_pattern(name)
+            for order in itertools.permutations(range(p.n)):
+                plan = generate_raw_plan(p, order)
+                _well_formed(plan)
+
+    def test_bad_order_rejected(self):
+        with pytest.raises(ValueError):
+            generate_raw_plan(FAN5, (0, 1))
+
+
+class TestOpt1CSE:
+    def test_fig2_cse_finds_a1a3(self):
+        """Paper Example 3: {A1, A3} is eliminated first for the demo order."""
+        plan = generate_raw_plan(FAN5, FIG2_ORDER)
+        n = common_subexpression_elimination(plan)
+        assert n >= 1
+        _well_formed(plan)
+
+    def test_cse_preserves_semantics_by_count(self):
+        from repro.core.ref_engine import RefEngine
+        from repro.graph.generate import erdos_renyi
+        g = erdos_renyi(40, 140, seed=5)
+        p = FAN5
+        raw = generate_raw_plan(p, FIG2_ORDER)
+        opt = generate_raw_plan(p, FIG2_ORDER)
+        common_subexpression_elimination(opt)
+        c_raw = RefEngine(raw, p, g)
+        c_raw.run()
+        c_opt = RefEngine(opt, p, g)
+        c_opt.run()
+        assert c_raw.counters.matches == c_opt.counters.matches
+        # CSE must not increase INT executions
+        assert c_opt.counters.int_ <= c_raw.counters.int_
+
+
+class TestOpt2Reorder:
+    def test_reorder_moves_int_before_enu(self):
+        """Paper Example 4: hoisted instructions execute fewer times."""
+        from repro.core.ref_engine import RefEngine
+        from repro.graph.generate import erdos_renyi
+        g = erdos_renyi(40, 140, seed=5)
+        base = generate_raw_plan(FAN5, FIG2_ORDER)
+        common_subexpression_elimination(base)
+        re_plan = generate_raw_plan(FAN5, FIG2_ORDER)
+        common_subexpression_elimination(re_plan)
+        reorder_instructions(re_plan)
+        _well_formed(re_plan)
+        a = RefEngine(base, FAN5, g)
+        a.run()
+        b = RefEngine(re_plan, FAN5, g)
+        b.run()
+        assert a.counters.matches == b.counters.matches
+        assert b.counters.computation_cost <= a.counters.computation_cost
+
+    def test_reorder_keeps_dbq_enu_relative_order(self):
+        plan = generate_raw_plan(FAN5, FIG2_ORDER)
+        before = [i.target for i in plan.instrs if i.op in (DBQ, ENU)]
+        reorder_instructions(plan)
+        after = [i.target for i in plan.instrs if i.op in (DBQ, ENU)]
+        assert [v for v in before if v[0] == "f"] == \
+            [v for v in after if v[0] == "f"]
+
+
+class TestOpt3Triangle:
+    def test_fig2_trc_replaces_start_intersections(self):
+        plan = generate_raw_plan(FAN5, FIG2_ORDER)
+        common_subexpression_elimination(plan)
+        reorder_instructions(plan)
+        n = apply_triangle_cache(plan, FAN5)
+        assert n >= 1                  # T7 / T6 in the paper's Fig. 2e
+        assert any(i.op == TRC for i in plan.instrs)
+        _well_formed(plan)
+
+    def test_trc_cache_hits_on_real_graph(self):
+        from repro.core.ref_engine import RefEngine
+        from repro.graph.generate import powerlaw
+        g = powerlaw(60, 4, seed=2)
+        plan = generate_optimized_plan(FAN5, FIG2_ORDER)
+        eng = RefEngine(plan, FAN5, g)
+        eng.run()
+        if eng.counters.trc > 0:
+            assert eng.counters.trc_hits >= 0
+
+
+class TestVCBC:
+    @pytest.mark.parametrize("pname", ["square", "chordal-square",
+                                       "clique4", "house"])
+    def test_compressed_counts_match(self, pname):
+        from repro.core.ref_engine import (RefEngine,
+                                           enumerate_matches_brute)
+        from repro.core.vcbc import count_code
+        from repro.graph.generate import erdos_renyi
+        p = get_pattern(pname)
+        g = erdos_renyi(40, 160, seed=7)
+        plan = generate_best_plan(p, g.stats(), vcbc=True)
+        assert plan.vcbc and plan.core_k < p.n
+        eng = RefEngine(plan, p, g, collect="codes")
+        eng.run()
+        total = sum(count_code(plan, p, c) for c in eng.codes)
+        brute = len(enumerate_matches_brute(
+            p, g, symmetry_breaking_constraints(p)))
+        assert total == brute
+
+
+class TestBestPlanSearch:
+    def test_pruning_reduces_candidates(self):
+        stats = GraphStats(1_000_000, 10_000_000)
+        for pname in ("square", "clique4", "house", "fan5"):
+            p = get_pattern(pname)
+            sr = search_matching_orders(p, stats)
+            assert sr.candidates, pname
+            assert sr.orders_explored <= sr.orders_total
+
+    def test_dual_pruning_keeps_canonical_order(self):
+        p = get_pattern("square")       # u1~=u3, u2~=u4 (0-based 0~2, 1~3)
+        stats = GraphStats(1_000_000, 10_000_000)
+        sr = search_matching_orders(p, stats)
+        for order in sr.candidates:
+            assert order.index(0) < order.index(2)
+            assert order.index(1) < order.index(3)
+
+    def test_best_plan_minimizes_comm(self):
+        stats = GraphStats(1_000_000, 10_000_000)
+        p = get_pattern("chordal-square")
+        best = generate_best_plan(p, stats)
+        best_comm = estimate_communication_cost(p, best, stats)
+        import itertools
+        for order in itertools.permutations(range(p.n)):
+            plan = generate_optimized_plan(p, order)
+            assert best_comm <= estimate_communication_cost(
+                p, plan, stats) * (1 + 1e-9)
+
+
+class TestSymmetry:
+    @pytest.mark.parametrize("pname", sorted(UNDIRECTED_PATTERNS))
+    def test_unique_representative(self, pname):
+        p = UNDIRECTED_PATTERNS[pname]
+        cons = symmetry_breaking_constraints(p)
+        assert check_unique_representative(p, cons)

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the system's invariants: random patterns
+produce well-formed plans whose counts match brute force; symmetry breaking
+yields exactly one representative; the cost model is permutation-consistent."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, assume, given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine_jax import enumerate_graph
+from repro.core.pattern import Pattern
+from repro.core.plangen import generate_best_plan, generate_optimized_plan
+from repro.core.ref_engine import RefEngine, enumerate_matches_brute
+from repro.core.symmetry import (check_unique_representative,
+                                 symmetry_breaking_constraints)
+from repro.graph.generate import erdos_renyi
+from repro.graph.storage import Graph
+
+
+def random_connected_pattern(draw, max_n=5):
+    n = draw(st.integers(3, max_n))
+    all_edges = list(itertools.combinations(range(n), 2))
+    # spanning tree first (guarantees connectivity)
+    perm = draw(st.permutations(list(range(n))))
+    edges = {(min(perm[i], perm[i + 1]), max(perm[i], perm[i + 1]))
+             for i in range(n - 1)}
+    extra = draw(st.sets(st.sampled_from(all_edges), max_size=4))
+    edges |= extra
+    return Pattern(n, tuple(sorted(edges)), name=f"rand{n}")
+
+
+pattern_strategy = st.builds(
+    lambda seed: None, st.integers())  # placeholder replaced by composite
+
+
+@st.composite
+def patterns(draw):
+    return random_connected_pattern(draw)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(patterns())
+def test_symmetry_unique_representative_random(p):
+    cons = symmetry_breaking_constraints(p)
+    assert check_unique_representative(p, cons)
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(patterns(), st.integers(0, 1000))
+def test_best_plan_counts_match_brute_random(p, seed):
+    g = erdos_renyi(24, 70, seed=seed % 7)
+    plan = generate_best_plan(p, g.stats())
+    eng = RefEngine(plan, p, g)
+    eng.run()
+    brute = len(enumerate_matches_brute(
+        p, g, symmetry_breaking_constraints(p)))
+    assert eng.counters.matches == brute
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(patterns(), st.integers(0, 5))
+def test_jax_engine_counts_match_random(p, gseed):
+    g = erdos_renyi(24, 70, seed=gseed)
+    plan = generate_best_plan(p, g.stats())
+    brute = len(enumerate_matches_brute(
+        p, g, symmetry_breaking_constraints(p)))
+    res = enumerate_graph(plan, g, batch=16)
+    assert res["count"] == brute
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(patterns())
+def test_every_order_gives_same_count(p):
+    """Plan semantics are order-invariant (the count is a graph property)."""
+    g = erdos_renyi(18, 45, seed=3)
+    counts = set()
+    for order in list(itertools.permutations(range(p.n)))[:6]:
+        plan = generate_optimized_plan(p, order)
+        eng = RefEngine(plan, p, g)
+        eng.run()
+        counts.add(eng.counters.matches)
+    assert len(counts) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 60), st.integers(0, 99))
+def test_graph_canonicalization_degree_order(n, m, seed):
+    """After canonical relabeling, vertex id order extends degree order —
+    the property that makes symmetry filters plain integer compares."""
+    g = erdos_renyi(n, min(m, n * (n - 1) // 2), seed=seed)
+    deg = g.deg
+    assert all(deg[i] <= deg[i + 1] for i in range(g.n - 1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=0, max_size=20),
+       st.integers(1, 8))
+def test_padded_adjacency_roundtrip(vals, lane):
+    edges = [(v % 7, (v * 3 + 1) % 7) for v in vals if v % 7 != (v * 3 + 1) % 7]
+    g = Graph.from_edges(7, edges, canonicalize=False)
+    rows, deg = g.padded_adjacency(lane=lane)
+    assert rows.shape[1] % lane == 0
+    for v in range(7):
+        real = [x for x in rows[v] if x < 7]
+        assert real == sorted(int(w) for w in g.adj[v])

@@ -1,0 +1,106 @@
+"""S-BENU: incremental pattern graphs, plan generation (incl. the paper's
+Fig. 6b reproduction), and continuous enumeration vs the snapshot-diff
+oracle — plus Theorem 5 (no duplicates across incremental patterns)."""
+
+import pytest
+
+from repro.core.estimate import GraphStats
+from repro.core.pattern import DIRECTED_PATTERNS, get_pattern
+from repro.core.sbenu import (IncrementalPattern, SBenuRefEngine,
+                              generate_best_sbenu_plans,
+                              generate_sbenu_plan, incremental_patterns,
+                              run_timestep, snapshot_diff_oracle)
+from repro.graph.dynamic import SnapshotStore
+from repro.graph.generate import edge_stream
+
+
+def test_tau_mapping():
+    p = get_pattern("dtoy")
+    dps = incremental_patterns(p)
+    assert len(dps) == p.m
+    dp2 = dps[1]
+    assert dp2.tau(1) == "either"
+    assert dp2.tau(2) == "delta"
+    assert dp2.tau(3) == "unaltered"
+
+
+def test_fig6b_plan_reproduction():
+    """The paper's Fig. 6b: ΔP_2 of the dtoy pattern with O: u1, u3, u2."""
+    p = get_pattern("dtoy")
+    dp = IncrementalPattern(p, 2)
+    plan = generate_sbenu_plan(dp, (0, 2, 1))
+    text = plan.pretty()
+    # the eight instructions of Fig. 6b, in order
+    assert "f1 := Init(start)" in text
+    assert "ADO1 := GetAdj(f1,delta,out,*)" in text
+    assert "op,f3 := Foreach" in text
+    assert "AEO1 := GetAdj(f1,either,out,op)" in text
+    assert "AUI3 := GetAdj(f3,unaltered,in,op)" in text
+    assert "Intersect(AEO1, AUI3)" in text
+    lines = text.splitlines()
+    denu = next(i for i, l in enumerate(lines) if "op,f3" in l)
+    aeo = next(i for i, l in enumerate(lines) if "AEO1" in l)
+    assert denu < aeo                  # op-dependent DBQ after Delta-ENU
+
+
+@pytest.mark.parametrize("pname", sorted(DIRECTED_PATTERNS))
+def test_continuous_enumeration_vs_oracle(pname):
+    p = DIRECTED_PATTERNS[pname]
+    g0, batches = edge_stream(n=25, m_init=100, steps=3, batch=25, seed=11)
+    store = SnapshotStore(g0)
+    stats = GraphStats(25, 100, delta_edges=25)
+    plans = generate_best_sbenu_plans(p, stats)
+    assert len(plans) == p.m
+    for batch in batches:
+        want_p, want_m = snapshot_diff_oracle(p, store, batch)
+        got_p, got_m, _ = run_timestep(p, plans, store, batch)
+        assert got_p == want_p
+        assert got_m == want_m
+
+
+def test_theorem5_no_duplicates_across_plans():
+    """Each match is produced by exactly one ΔP_i (engine-level check)."""
+    p = get_pattern("q3'")
+    g0, batches = edge_stream(n=20, m_init=80, steps=2, batch=20, seed=3)
+    store = SnapshotStore(g0)
+    plans = generate_best_sbenu_plans(p, GraphStats(20, 80, delta_edges=20))
+    for batch in batches:
+        store.begin_step(batch)
+        eng = SBenuRefEngine(plans, p, store)
+        eng.run_timestep()
+        assert len(eng.delta_plus) == len(set(eng.delta_plus))
+        assert len(eng.delta_minus) == len(set(eng.delta_minus))
+        store.end_step()
+
+
+def test_task_splitting_sbenu():
+    p = get_pattern("q1'")
+    g0, batches = edge_stream(n=30, m_init=150, steps=1, batch=40, seed=5)
+    store = SnapshotStore(g0)
+    plans = generate_best_sbenu_plans(p, GraphStats(30, 150,
+                                                    delta_edges=40))
+    want_p, want_m = snapshot_diff_oracle(p, store, batches[0])
+    got_p, got_m, ctr = run_timestep(p, plans, store, batches[0], theta=3)
+    assert got_p == want_p and got_m == want_m
+
+
+def test_stricter_dual_condition():
+    """q5' (DAG K4) has vertices that are SE undirected but not under typed
+    containment — the incremental SE must be stricter or equal."""
+    p = get_pattern("q5'")
+    for dp in incremental_patterns(p):
+        classes = dp.se_classes()
+        for group in classes:
+            for a in group:
+                for b in group:
+                    if a != b:
+                        assert dp.syntactic_equivalent(a, b)
+
+
+def test_two_form_storage_updates_only_touched():
+    g0, batches = edge_stream(n=15, m_init=50, steps=1, batch=10, seed=9)
+    store = SnapshotStore(g0)
+    store.begin_step(batches[0])
+    touched = set(store.delta_out) | set(store.delta_in)
+    assert touched
+    assert len(touched) < g0.n         # only a fraction of vertices change

@@ -1,0 +1,34 @@
+"""Cross-engine conformance: every backend of the unified Executor API
+must produce identical match counts on the same plan (the correctness bar
+set by the distributed-subgraph-matching survey — exact agreement, not
+approximate). The driver's splitting/overflow policy is shared, so any
+disagreement is an engine bug, never a chunking artifact."""
+
+from __future__ import annotations
+
+from repro.core.executor import make_executor
+from repro.core.pattern import get_pattern
+from repro.core.plangen import generate_best_plan
+from repro.graph.generate import powerlaw
+
+from .common import Table
+
+PATTERNS = ("triangle", "square", "clique4", "house")
+
+
+def run() -> Table:
+    g = powerlaw(150, 4, seed=7)
+    t = Table("Cross-engine conformance (unified Executor API)",
+              ["pattern", "ref", "jax", "jax splits", "agree"])
+    for pname in PATTERNS:
+        p = get_pattern(pname)
+        plan = generate_best_plan(p, g.stats())
+        ref = make_executor("ref").run(plan, g, batch=64)
+        jx = make_executor("jax").run(plan, g, batch=64)
+        t.add(pname, ref.count, jx.count, jx.chunks_split,
+              "yes" if ref.count == jx.count else "NO")
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

@@ -9,8 +9,10 @@ import sys
 import time
 
 
-SUITES = ["plan_search", "plan_opts", "cache", "task_split", "vs_join",
-          "sbenu_bench", "scaling", "roofline"]
+# every enumeration suite routes through the unified Executor API
+# (repro/core/executor.py) — one chunking/overflow policy across engines
+SUITES = ["plan_search", "plan_opts", "cache", "conformance", "task_split",
+          "vs_join", "sbenu_bench", "scaling", "roofline"]
 
 
 def main() -> None:

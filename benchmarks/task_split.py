@@ -1,13 +1,17 @@
 """Fig. 11 reproduction: task splitting evens the per-task work
-distribution (power-law graphs make unsplit tasks heavily skewed)."""
+distribution (power-law graphs make unsplit tasks heavily skewed).
+
+Routed through the unified Executor API: the ref backend θ-splits heavy
+start vertices into C2 slices, and the driver surfaces per-task work via
+``ExecStats.extras`` — the same accounting every engine shares."""
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.executor import make_executor
 from repro.core.pattern import get_pattern
 from repro.core.plangen import generate_best_plan
-from repro.core.ref_engine import RefEngine
 from repro.graph.generate import powerlaw
 
 from .common import Table
@@ -20,12 +24,10 @@ def run() -> Table:
     t = Table("Fig. 11: task splitting (per-task work distribution)",
               ["theta", "tasks", "max", "p99", "mean", "matches"])
     for theta in (None, 64, 16, 4):
-        eng = RefEngine(plan, p, g)
-        eng.run(theta=theta)
-        w = np.array(eng.counters.per_task_work)
+        st = make_executor("ref").run(plan, g, theta=theta, batch=64)
+        w = np.array(st.extras["per_task_work"])
         t.add("inf" if theta is None else theta, len(w), int(w.max()),
-              int(np.percentile(w, 99)), f"{w.mean():.1f}",
-              eng.counters.matches)
+              int(np.percentile(w, 99)), f"{w.mean():.1f}", st.count)
     return t
 
 

@@ -5,6 +5,10 @@ The paper's headline: join frameworks shuffle partial-match tables (bytes
 run both on the same graphs and report wall time + bytes moved:
     join: sum of intermediate table bytes (hash repartition per join)
     BENU: distinct adjacency rows fetched x padded row bytes
+
+The BENU side runs through the unified Executor API (ref backend with a
+capacity-bounded DB cache); the remote-row count comes straight from the
+driver's ``ExecStats.extras``.
 """
 
 from __future__ import annotations
@@ -12,10 +16,10 @@ from __future__ import annotations
 import time
 
 from repro.core.baseline_join import enumerate_join
-from repro.core.engine_jax import enumerate_graph
+from repro.core.executor import make_executor
 from repro.core.pattern import get_pattern
 from repro.core.plangen import generate_best_plan
-from repro.core.ref_engine import GraphDB, RefEngine
+from repro.core.ref_engine import GraphDB
 from repro.graph.generate import powerlaw
 
 from .common import Table
@@ -35,12 +39,10 @@ def run() -> Table:
         plan = generate_best_plan(p, g.stats())
         db = GraphDB(g, cache_capacity=g.n // 10)
         t0 = time.perf_counter()
-        eng = RefEngine(plan, p, g, db=db)
-        eng.run()
+        st = make_executor("ref", db=db).run(plan, g, batch=64)
         t_benu = time.perf_counter() - t0
-        assert eng.counters.matches == js.matches, (pname, js.matches,
-                                                    eng.counters.matches)
-        benu_bytes = db.remote_queries * row_bytes
+        assert st.count == js.matches, (pname, js.matches, st.count)
+        benu_bytes = st.extras["remote_queries"] * row_bytes
         ratio = js.bytes_shuffled / max(benu_bytes, 1)
         t.add(pname, js.matches, f"{t_join:.2f}",
               f"{js.bytes_shuffled / 1e6:.1f}", f"{t_benu:.2f}",

@@ -1,0 +1,66 @@
+"""Version compatibility shims for jax.
+
+The repo targets the modern ``jax.shard_map`` API (with its ``check_vma``
+argument). Older jax releases only ship
+``jax.experimental.shard_map.shard_map`` whose equivalent knob is named
+``check_rep``. Every call site goes through :func:`shard_map` below so the
+rest of the codebase is written once against the new API.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis_dict"]
+
+
+def _replication_kwarg(fn: Callable) -> Optional[str]:
+    """The replication-check kwarg this shard_map takes: jax renamed
+    ``check_rep`` to ``check_vma`` after promoting shard_map out of
+    experimental, so dispatch on the signature, not the module."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - C callables
+        return "check_vma"
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return name
+    return None
+
+
+def shard_map(f: Callable, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None, **kwargs):
+    """``jax.shard_map`` with fallback to the experimental module.
+
+    ``check_vma`` (new-style name) maps to whatever replication-check
+    kwarg the installed jax accepts; other keyword arguments pass
+    through.
+    """
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    if check_vma is not None:
+        kw = _replication_kwarg(sm)
+        if kw is not None:
+            kwargs[kw] = check_vma
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **kwargs)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, Any]:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions.
+
+    Newer jax returns one dict; older versions return a list with one dict
+    per SPMD partition (all partitions identical for our single-module
+    programs). Missing/empty analyses normalize to ``{}``.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)

@@ -35,10 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..distributed.rowstore import (RowStoreSpec, build_row_shards,
-                                    make_distributed_fetch)
+from ..compat import shard_map
+from ..distributed.rowstore import RowStoreSpec, make_distributed_fetch
 from ..graph.storage import Graph
-from .engine_jax import build_enumerator, check_jit_supported, default_caps
+from .engine_jax import build_enumerator, check_jit_supported
 from .instructions import ENU, Plan
 
 
@@ -133,8 +133,8 @@ def build_distributed_step(plan: Plan,
     out_specs = (P(axis), P(axis), P(axis), P(axis), P(None, axis))
     if has_universe:
         in_specs.append(P(None))
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=tuple(in_specs),
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map(local_fn, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=out_specs, check_vma=False)
     return jax.jit(fn)
 
 
@@ -148,93 +148,32 @@ def enumerate_distributed(plan: Plan, graph: Graph,
                           rebalance: bool = False,
                           universe_chunk: int = 1024,
                           intersect_impl: str = "auto",
-                          max_retries: int = 6) -> DistEnumStats:
+                          max_retries: int = 6,
+                          adaptive_split: bool = True) -> DistEnumStats:
     """Enumerate ``plan`` over ``graph`` on every device of ``mesh``.
 
-    Exact (overflow/drops trigger capacity-doubling retries). The
-    communication cost surfaced in ``cold_rows_fetched`` is the paper's
+    Thin wrapper over the unified Executor API (core/executor.py): the
+    shared adaptive driver re-chunks overflowing global batches (keeping
+    shard-divisible shapes) before escalating capacities / request
+    budgets — exact in all cases. ``cold_rows_fetched`` is the paper's
     "network communication cost" metric for Fig. 10-style experiments.
     """
+    from .executor import DistBackend, ExecutorConfig, drive
     if mesh is None:
         mesh = enumeration_mesh(axis)
     S = mesh.devices.size
-    shards_np, hot_np, spec = build_row_shards(graph, S, hot=hot)
-    caps0 = list(caps) if caps is not None else default_caps(
-        plan, batch_per_shard, spec.d)
-    # caps divisible by S for the rebalancer stripes
-    caps0 = [-(-c // S) * S for c in caps0]
-    rc = req_cap if req_cap is not None else max(
-        64, 2 * batch_per_shard // S)
-    has_universe = check_jit_supported(plan)
-
-    with jax.default_device(jax.devices()[0]):
-        shards = jax.device_put(
-            shards_np, jax.NamedSharding(mesh, P(axis, None, None)))
-        hot_rows = jax.device_put(
-            hot_np, jax.NamedSharding(mesh, P(None, None)))
-
-    if has_universe:
-        w = min(universe_chunk, max(graph.n, 1))
-        uni_chunks = []
-        for u0 in range(0, graph.n, w):
-            chunk = np.full(w, graph.n, np.int32)
-            hi = min(u0 + w, graph.n)
-            chunk[:hi - u0] = np.arange(u0, hi, dtype=np.int32)
-            uni_chunks.append(jax.device_put(
-                jnp.asarray(chunk), jax.NamedSharding(mesh, P(None))))
-    else:
-        uni_chunks = [None]
-
-    steps: Dict[Tuple[Tuple[int, ...], int], Callable] = {}
-
-    def get_step(c: Tuple[int, ...], r: int):
-        key = (c, r)
-        if key not in steps:
-            steps[key] = build_distributed_step(
-                plan, spec, mesh, axis, c, r, rebalance=rebalance,
-                intersect_impl=intersect_impl)
-        return steps[key]
-
-    gbatch = S * batch_per_shard
-    total = 0
-    retried = 0
-    tot_cold = 0
-    tot_drops_seen = 0
-    per_shard = np.zeros(S, np.int64)
-    level_acc: Optional[np.ndarray] = None
-    for s0 in range(0, graph.n, gbatch):
-        ids = np.arange(s0, s0 + gbatch, dtype=np.int32)
-        svalid = ids < graph.n
-        ids = np.where(svalid, ids, graph.n)
-        sharding = jax.NamedSharding(mesh, P(axis))
-        args = [shards, hot_rows,
-                jax.device_put(jnp.asarray(ids), sharding),
-                jax.device_put(jnp.asarray(svalid), sharding)]
-        for uni in uni_chunks:
-            c, r = tuple(caps0), rc
-            a = args + ([uni] if uni is not None else [])
-            for _ in range(max_retries + 1):
-                counts, overflow, cold, drops, levels = get_step(c, r)(*a)
-                ov = int(np.sum(overflow))
-                dr = int(np.sum(drops))
-                if ov == 0 and dr == 0:
-                    break
-                retried += 1
-                if ov:
-                    c = tuple(x * 2 for x in c)
-                if dr:
-                    r = r * 2
-                tot_drops_seen += dr
-            else:  # pragma: no cover
-                raise RuntimeError("chunk overflowed after retries")
-            total += int(np.sum(np.asarray(counts, dtype=np.int64)))
-            per_shard += np.asarray(counts, dtype=np.int64)
-            tot_cold += int(np.sum(cold))
-            lv = np.asarray(levels)
-            level_acc = lv if level_acc is None else level_acc + lv
+    backend = DistBackend(mesh=mesh, axis=axis, hot=hot,
+                          rebalance=rebalance, req_cap=req_cap)
+    cfg = ExecutorConfig(batch=S * batch_per_shard, caps=caps,
+                         universe_chunk=universe_chunk,
+                         intersect_impl=intersect_impl,
+                         max_retries=max_retries,
+                         adaptive_split=adaptive_split)
+    st = drive(backend, plan, graph, cfg)
     return DistEnumStats(
-        count=total, per_shard_counts=per_shard,
-        per_shard_level_sizes=(level_acc if level_acc is not None
-                               else np.zeros((0, S))),
-        cold_rows_fetched=tot_cold, request_drops=tot_drops_seen,
-        overflow=0, chunks_retried=retried)
+        count=st.count,
+        per_shard_counts=st.extras["per_shard_counts"],
+        per_shard_level_sizes=st.extras["per_shard_level_sizes"],
+        cold_rows_fetched=st.extras["cold_rows_fetched"],
+        request_drops=st.drops_seen,
+        overflow=0, chunks_retried=st.chunks_retried + st.chunks_split)

@@ -371,70 +371,27 @@ def enumerate_graph(plan: Plan, graph: Graph,
                     collect_matches: bool = False,
                     intersect_impl: str = "auto",
                     universe_chunk: int = 1024,
-                    max_retries: int = 6) -> Dict[str, object]:
+                    max_retries: int = 6,
+                    adaptive_split: bool = True) -> Dict[str, object]:
     """Run ``plan`` over every start vertex of ``graph`` on one device.
 
-    Exact: chunks with overflow are retried with doubled capacities (the
-    vectorized analogue of the paper's θ task splitting: a too-heavy chunk
-    is re-executed in a shape that fits).
+    Thin wrapper over the unified Executor API (core/executor.py): the
+    shared driver re-chunks overflowing start batches (the paper's §5.2
+    task splitting, vectorized) and escalates to capacity doubling only
+    for single unsplittable chunks — exact in all cases.
     """
-    dg = DeviceGraph.from_graph(graph)
-    fetch = dg.local_fetch()
-    sentinel = dg.n
-    total = 0            # python int: exact cross-chunk accumulation
-    overflowed = 0
-    all_matches: List[np.ndarray] = []
-    caps0 = list(caps) if caps is not None else default_caps(
-        plan, batch, dg.d)
-    has_universe = check_jit_supported(plan)
-
-    jitted: Dict[Tuple[int, ...], Callable] = {}
-
-    def get_runner(c: Tuple[int, ...]):
-        if c not in jitted:
-            run = build_enumerator(plan, sentinel, c, fetch,
-                                   collect_matches=collect_matches,
-                                   intersect_impl=intersect_impl)
-            jitted[c] = jax.jit(run)
-        return jitted[c]
-
-    if has_universe:
-        w = min(universe_chunk, max(graph.n, 1))
-        uni_chunks = []
-        for u0 in range(0, graph.n, w):
-            chunk = np.full(w, graph.n, np.int32)
-            hi = min(u0 + w, graph.n)
-            chunk[:hi - u0] = np.arange(u0, hi, dtype=np.int32)
-            uni_chunks.append(jnp.asarray(chunk))
-    else:
-        uni_chunks = [None]
-
-    for s0 in range(0, graph.n, batch):
-        ids = np.arange(s0, s0 + batch, dtype=np.int32)
-        svalid = ids < graph.n
-        ids = np.where(svalid, ids, graph.n)
-        for uni in uni_chunks:
-            c = tuple(caps0)
-            for attempt in range(max_retries + 1):
-                args = (jnp.asarray(ids), jnp.asarray(svalid))
-                if uni is not None:
-                    args = args + (uni,)
-                res = get_runner(c)(*args)
-                ov = int(res.overflow)
-                if ov == 0:
-                    break
-                overflowed += 1
-                c = tuple(int(x * 2) for x in c)
-            else:  # pragma: no cover
-                raise RuntimeError(f"chunk at {s0} overflowed after retries")
-            total = total + int(res.count)
-            if collect_matches and res.matches is not None:
-                m = np.asarray(res.matches)
-                mv = np.asarray(res.matches_valid)
-                all_matches.append(m[mv])
-    out: Dict[str, object] = {"count": total,
-                              "chunks_retried": overflowed}
+    from .executor import ExecutorConfig, JaxBackend, drive
+    cfg = ExecutorConfig(batch=batch, caps=caps,
+                         collect_matches=collect_matches,
+                         intersect_impl=intersect_impl,
+                         universe_chunk=universe_chunk,
+                         max_retries=max_retries,
+                         adaptive_split=adaptive_split)
+    st = drive(JaxBackend(), plan, graph, cfg)
+    out: Dict[str, object] = {"count": st.count,
+                              "chunks_retried": st.chunks_retried
+                              + st.chunks_split,
+                              "chunks_split": st.chunks_split}
     if collect_matches:
-        out["matches"] = (np.concatenate(all_matches, axis=0)
-                          if all_matches else np.zeros((0, plan.n), np.int32))
+        out["matches"] = st.matches
     return out

@@ -1,0 +1,622 @@
+"""Unified Executor API: one driver, many enumeration backends.
+
+B-BENU's central claim is that a single backtracking execution plan can
+drive very different runtimes — per-task local search (the paper's worker
+model), lockstep SPMD frontier expansion (one device or a whole mesh), and
+streaming delta enumeration — without ever shuffling partial results. This
+module is that claim expressed as code: every engine in the repo implements
+the small :class:`ExecutorBackend` protocol (its fetch / intersect / shard
+specifics only) and the **same** driver owns
+
+* plan preprocessing (universe detection, capacity defaults),
+* the frontier lifecycle (start-vertex batching, universe chunking),
+* overflow accounting, and
+* **adaptive task splitting** (paper §5.2, vectorized): when a chunk
+  reports ENU overflow the driver first *re-chunks* the offending
+  start-vertex batch into smaller halves and re-descends with smaller
+  frontiers (same capacities, fewer roots -> fewer children per level);
+  only when a chunk can no longer be split does it escalate to capacity
+  doubling. No match is ever dropped: an overflowed chunk's partial result
+  is discarded and the chunk is re-executed in a shape that fits.
+
+Backends::
+
+    ref     pure-Python oracle interpreter        (core/ref_engine.py)
+    jax     single-device vectorized frontier     (core/engine_jax.py)
+    dist    shard_map SPMD over a device mesh     (core/engine_dist.py)
+    sbenu   continuous/delta enumeration          (core/sbenu.py)
+
+Use :func:`make_executor` (or instantiate a backend directly) and call
+:meth:`Executor.run`; all engines route through here, so every launcher,
+benchmark, and conformance test shares one chunk-size / overflow policy.
+"""
+
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from ..graph.storage import Graph
+from .instructions import ENU, Plan
+from .pattern import Pattern
+
+
+# --------------------------------------------------------------------------
+# Shared frontier-lifecycle helpers (previously copied in every engine)
+# --------------------------------------------------------------------------
+
+
+def start_id_batches(n: int, batch: int,
+                     sentinel: Optional[int] = None
+                     ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Yield ``(ids int32[batch], valid bool[batch])`` covering ``range(n)``."""
+    sent = n if sentinel is None else sentinel
+    for s0 in range(0, n, batch):
+        ids = np.arange(s0, s0 + batch, dtype=np.int32)
+        valid = ids < n
+        yield np.where(valid, ids, sent).astype(np.int32), valid
+
+
+def build_universe_chunks(n: int, width: int,
+                          sentinel: Optional[int] = None) -> List[np.ndarray]:
+    """Sentinel-padded slices of V(G) for plans with a detached vertex
+    (the paper's |V(G)|/θ subtask split for non-adjacent (u_k1, u_k2))."""
+    sent = n if sentinel is None else sentinel
+    w = min(width, max(n, 1))
+    chunks: List[np.ndarray] = []
+    for u0 in range(0, n, w):
+        c = np.full(w, sent, np.int32)
+        hi = min(u0 + w, n)
+        c[:hi - u0] = np.arange(u0, hi, dtype=np.int32)
+        chunks.append(c)
+    return chunks
+
+
+def split_id_batch(ids: np.ndarray, valid: np.ndarray, granularity: int,
+                   sentinel: int
+                   ) -> Optional[List[Tuple[np.ndarray, np.ndarray]]]:
+    """Split a start batch into two half-shaped batches (§5.2 task split).
+
+    The valid ids are dealt evenly into two arrays of length
+    ``ceil(B/2)`` rounded up to ``granularity`` (mesh width for the
+    distributed backend). Returns ``None`` when the batch cannot shrink
+    further.
+    """
+    B = ids.shape[0]
+    # ceil(B/2) rounded up to granularity: a half always fits its
+    # ceil(nv/2) valid ids — no start may ever be truncated away
+    half = -(-(-(-B // 2)) // granularity) * granularity if B > 1 else 0
+    if half < granularity or half >= B:
+        return None
+    vids = ids[valid]
+    out = []
+    for part in (vids[0::2], vids[1::2]):
+        a = np.full(half, sentinel, np.int32)
+        v = np.zeros(half, bool)
+        k = part.shape[0]
+        a[:k] = part
+        v[:k] = True
+        out.append((a, v))
+    return out
+
+
+def plan_enu_count(plan: Plan) -> int:
+    return sum(1 for ins in plan.instrs if ins.op == ENU)
+
+
+# --------------------------------------------------------------------------
+# Protocol types
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ExecutorConfig:
+    """Driver-level policy shared by every backend."""
+
+    batch: int = 256                 # global start-vertex chunk size
+    caps: Optional[Sequence[int]] = None   # per-ENU frontier capacities
+    universe_chunk: int = 1024       # width of V(G) slices (detached vertex)
+    max_retries: int = 6             # capacity-doubling budget per chunk
+    adaptive_split: bool = True      # re-chunk before growing capacities
+    collect_matches: bool = False
+    intersect_impl: str = "auto"
+    theta: Optional[int] = None      # interpreter task-split threshold
+
+
+@dataclass
+class ChunkResult:
+    """One chunk execution. ``overflow``/``drops`` > 0 invalidates the
+    result: the driver discards it and re-chunks or escalates."""
+
+    count: int
+    overflow: int = 0
+    drops: int = 0
+    matches: Optional[np.ndarray] = None          # [k, n] valid rows only
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class ExecStats:
+    """Driver result: exact totals + overflow/splitting accounting."""
+
+    count: int = 0
+    chunks_run: int = 0
+    chunks_split: int = 0            # adaptive re-chunk events
+    chunks_retried: int = 0          # capacity/request escalations
+    drops_seen: int = 0
+    matches: Optional[np.ndarray] = None
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    def merge_extras(self, other: Dict[str, Any]) -> None:
+        for k, v in other.items():
+            if k in self.extras:
+                self.extras[k] = self.extras[k] + v
+            else:
+                self.extras[k] = v
+
+
+class ExecutorBackend(ABC):
+    """What an engine must provide: its fetch/intersect/shard specifics.
+
+    The driver owns chunking, retries, and splitting; backends execute one
+    fixed-shape chunk at a time and report overflow honestly.
+    """
+
+    name: str = "?"
+    #: start-batch shapes must be multiples of this (mesh width for SPMD)
+    granularity: int = 1
+    #: whether the driver may re-chunk this backend's batches
+    splittable: bool = True
+
+    @abstractmethod
+    def prepare(self, plan: Any, source: Any, config: ExecutorConfig) -> None:
+        """Plan preprocessing + device placement. Called once per run."""
+
+    @abstractmethod
+    def run_chunk(self, ids: np.ndarray, valid: np.ndarray,
+                  universe_chunk: Optional[np.ndarray],
+                  caps: Tuple[int, ...]) -> ChunkResult:
+        """Execute one fixed-shape chunk of start vertices."""
+
+    def start_batches(self, config: ExecutorConfig
+                      ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        yield from start_id_batches(self._n_starts(), config.batch)
+
+    def universe_chunks(self, config: ExecutorConfig
+                        ) -> Sequence[Optional[np.ndarray]]:
+        return [None]
+
+    def initial_caps(self, config: ExecutorConfig) -> Tuple[int, ...]:
+        return ()
+
+    def grow_caps(self, caps: Tuple[int, ...]) -> Tuple[int, ...]:
+        return tuple(int(c * 2) for c in caps)
+
+    def escalate_requests(self) -> None:
+        """Called when a chunk reported request drops (dist fetch only)."""
+
+    def finalize(self, stats: ExecStats) -> None:
+        """Attach backend-specific extras to the driver stats."""
+
+    def _n_starts(self) -> int:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# The adaptive task-splitting driver
+# --------------------------------------------------------------------------
+
+
+def drive(backend: ExecutorBackend, plan: Any, source: Any,
+          config: ExecutorConfig) -> ExecStats:
+    """Run ``plan`` over ``source`` on ``backend`` — exactly.
+
+    A chunk that overflows is never silently truncated: its (partial)
+    result is discarded, and the driver re-descends either on two smaller
+    sub-chunks (adaptive task splitting — same capacities, smaller
+    frontiers) or, once a chunk is a single unsplittable batch, with
+    doubled capacities.
+    """
+    backend.prepare(plan, source, config)
+    stats = ExecStats()
+    all_matches: List[np.ndarray] = []
+    caps0 = tuple(backend.initial_caps(config))
+    sentinel = getattr(backend, "sentinel", 0)
+    for ids, valid in backend.start_batches(config):
+        for uni in backend.universe_chunks(config):
+            # (ids, valid, caps, escalations) — LIFO work stack
+            work: List[Tuple[np.ndarray, np.ndarray, Tuple[int, ...], int]]
+            work = [(ids, valid, caps0, 0)]
+            while work:
+                cids, cvalid, caps, tries = work.pop()
+                if not cvalid.any():
+                    continue
+                res = backend.run_chunk(cids, cvalid, uni, caps)
+                stats.chunks_run += 1
+                ok = res.overflow == 0 and res.drops == 0
+                if ok:
+                    stats.count += int(res.count)
+                    stats.merge_extras(res.extras)
+                    if res.matches is not None:
+                        all_matches.append(res.matches)
+                    continue
+                if res.drops > 0:
+                    stats.drops_seen += int(res.drops)
+                    backend.escalate_requests()
+                halves = None
+                if (res.overflow > 0 and config.adaptive_split
+                        and backend.splittable):
+                    halves = split_id_batch(cids, cvalid,
+                                            backend.granularity, sentinel)
+                if halves is not None:
+                    stats.chunks_split += 1
+                    for h_ids, h_valid in halves:
+                        work.append((h_ids, h_valid, caps, tries))
+                    continue
+                if tries >= config.max_retries:
+                    raise RuntimeError(
+                        f"[{backend.name}] chunk overflowed after "
+                        f"{tries} escalations (caps={caps})")
+                stats.chunks_retried += 1
+                new_caps = backend.grow_caps(caps) if res.overflow else caps
+                work.append((cids, cvalid, new_caps, tries + 1))
+    if config.collect_matches:
+        stats.matches = (np.concatenate(all_matches, axis=0) if all_matches
+                         else np.zeros((0, getattr(plan, "n", 0)), np.int32))
+    backend.finalize(stats)
+    return stats
+
+
+class Executor:
+    """Facade: ``Executor(backend).run(plan, graph, batch=..., ...)``."""
+
+    def __init__(self, backend: ExecutorBackend):
+        self.backend = backend
+
+    def run(self, plan: Any, source: Any,
+            config: Optional[ExecutorConfig] = None, **kwargs) -> ExecStats:
+        cfg = config if config is not None else ExecutorConfig(**kwargs)
+        return drive(self.backend, plan, source, cfg)
+
+
+# --------------------------------------------------------------------------
+# Backend: reference interpreter (pure Python oracle)
+# --------------------------------------------------------------------------
+
+
+class RefBackend(ExecutorBackend):
+    """Per-task backtracking interpreter; the correctness oracle.
+
+    Capacities do not exist here (recursion never overflows), but the
+    paper's θ task splitting does: heavy start vertices split into C2
+    slices inside :meth:`run_chunk`.
+    """
+
+    name = "ref"
+    splittable = True
+
+    def __init__(self, db=None, collect: str = "count",
+                 pattern: Optional[Pattern] = None):
+        self._db = db
+        self._collect = collect
+        self._given_pattern = pattern
+        self.engine = None
+
+    def prepare(self, plan: Plan, source: Graph,
+                config: ExecutorConfig) -> None:
+        from .ref_engine import RefEngine
+        self.plan, self.graph = plan, source
+        self.sentinel = source.n
+        collect = self._collect
+        if config.collect_matches and collect == "count":
+            collect = "matches"
+        self.engine = RefEngine(plan, self._pattern(plan), source,
+                                db=self._db, collect=collect)
+        self._theta = config.theta
+
+    def _pattern(self, plan: Plan) -> Pattern:
+        if self._given_pattern is not None:
+            return self._given_pattern
+        from .pattern import get_pattern
+        return get_pattern(plan.pattern_name)
+
+    def _n_starts(self) -> int:
+        return self.graph.n
+
+    def run_chunk(self, ids, valid, universe_chunk, caps) -> ChunkResult:
+        from .ref_engine import tasks_for_starts
+        eng = self.engine
+        tasks = tasks_for_starts(self.plan, eng.pattern, self.graph,
+                                 ids[valid], theta=self._theta)
+        m0 = eng.counters.matches
+        k0 = len(eng.matches)
+        eng.run(tasks=tasks)
+        matches = None
+        if eng.collect == "matches":
+            matches = np.asarray(eng.matches[k0:], np.int32).reshape(
+                -1, self.plan.n)
+        return ChunkResult(count=eng.counters.matches - m0, matches=matches)
+
+    def finalize(self, stats: ExecStats) -> None:
+        c = self.engine.counters
+        stats.extras.update(
+            dbq=c.dbq, int_=c.int_, trc=c.trc, trc_hits=c.trc_hits,
+            enu=c.enu, per_task_work=list(c.per_task_work),
+            remote_queries=self.engine.db.remote_queries,
+            total_queries=self.engine.db.total_queries)
+
+
+# --------------------------------------------------------------------------
+# Backend: single-device vectorized frontier engine
+# --------------------------------------------------------------------------
+
+
+class JaxBackend(ExecutorBackend):
+    """Lockstep frontier expansion on one device (core/engine_jax.py)."""
+
+    name = "jax"
+
+    def __init__(self, compaction: str = "cumsum"):
+        self._compaction = compaction
+
+    def prepare(self, plan: Plan, source: Graph,
+                config: ExecutorConfig) -> None:
+        import jax
+        from .engine_jax import (DeviceGraph, check_jit_supported,
+                                 default_caps)
+        self.plan, self.graph = plan, source
+        self.dg = DeviceGraph.from_graph(source)
+        self.fetch = self.dg.local_fetch()
+        self.sentinel = self.dg.n
+        self.has_universe = check_jit_supported(plan)
+        self._caps0 = tuple(config.caps) if config.caps is not None else \
+            tuple(default_caps(plan, config.batch, self.dg.d))
+        self._collect = config.collect_matches
+        self._intersect = config.intersect_impl
+        self._jit = jax.jit
+        self._runners: Dict[Tuple[int, Tuple[int, ...]], Callable] = {}
+
+    def _n_starts(self) -> int:
+        return self.graph.n
+
+    def universe_chunks(self, config: ExecutorConfig):
+        if not self.has_universe:
+            return [None]
+        return build_universe_chunks(self.graph.n, config.universe_chunk)
+
+    def initial_caps(self, config: ExecutorConfig) -> Tuple[int, ...]:
+        return self._caps0
+
+    def _runner(self, B: int, caps: Tuple[int, ...]) -> Callable:
+        key = (B, caps)
+        if key not in self._runners:
+            from .engine_jax import build_enumerator
+            run = build_enumerator(self.plan, self.sentinel, caps, self.fetch,
+                                   collect_matches=self._collect,
+                                   intersect_impl=self._intersect,
+                                   compaction=self._compaction)
+            self._runners[key] = self._jit(run)
+        return self._runners[key]
+
+    def run_chunk(self, ids, valid, universe_chunk, caps) -> ChunkResult:
+        import jax.numpy as jnp
+        args = (jnp.asarray(ids), jnp.asarray(valid))
+        if universe_chunk is not None:
+            args = args + (jnp.asarray(universe_chunk),)
+        res = self._runner(ids.shape[0], caps)(*args)
+        ov = int(res.overflow)
+        matches = None
+        if self._collect and ov == 0 and res.matches is not None:
+            m = np.asarray(res.matches)
+            matches = m[np.asarray(res.matches_valid)]
+        return ChunkResult(count=int(res.count), overflow=ov,
+                           matches=matches)
+
+
+# --------------------------------------------------------------------------
+# Backend: shard_map SPMD over a device mesh
+# --------------------------------------------------------------------------
+
+
+class DistBackend(ExecutorBackend):
+    """Mesh-wide SPMD frontier engine with the distributed row store."""
+
+    name = "dist"
+
+    def __init__(self, mesh=None, axis: str = "shard", hot: int = 0,
+                 rebalance: bool = False, req_cap: Optional[int] = None):
+        self._mesh = mesh
+        self._axis = axis
+        self._hot = hot
+        self._rebalance = rebalance
+        self._req_cap0 = req_cap
+
+    def prepare(self, plan: Plan, source: Graph,
+                config: ExecutorConfig) -> None:
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..distributed.rowstore import build_row_shards
+        from .engine_jax import check_jit_supported, default_caps
+        from .engine_dist import enumeration_mesh
+        self.plan, self.graph = plan, source
+        mesh = self._mesh if self._mesh is not None else enumeration_mesh(
+            self._axis)
+        self.mesh = mesh
+        self.S = mesh.devices.size
+        self.granularity = self.S
+        shards_np, hot_np, spec = build_row_shards(source, self.S,
+                                                   hot=self._hot)
+        self.spec = spec
+        self.sentinel = spec.n
+        self.has_universe = check_jit_supported(plan)
+        batch_per_shard = max(config.batch // self.S, 1)
+        caps = list(config.caps) if config.caps is not None else \
+            default_caps(plan, batch_per_shard, spec.d)
+        # caps divisible by S for the rebalancer stripes
+        self._caps0 = tuple(-(-c // self.S) * self.S for c in caps)
+        self.req_cap = self._req_cap0 if self._req_cap0 is not None else \
+            max(64, 2 * batch_per_shard // self.S)
+        self._intersect = config.intersect_impl
+        with jax.default_device(jax.devices()[0]):
+            self.shards = jax.device_put(
+                shards_np, NamedSharding(mesh, P(self._axis, None, None)))
+            self.hot_rows = jax.device_put(
+                hot_np, NamedSharding(mesh, P(None, None)))
+        self._uni = [
+            jax.device_put(jnp.asarray(c), NamedSharding(mesh, P(None)))
+            for c in build_universe_chunks(source.n, config.universe_chunk)
+        ] if self.has_universe else [None]
+        self._id_sharding = NamedSharding(mesh, P(self._axis))
+        self._steps: Dict[Tuple[Tuple[int, ...], int], Callable] = {}
+        self._per_shard = np.zeros(self.S, np.int64)
+        self._level_acc: Optional[np.ndarray] = None
+        self._cold = 0
+
+    def _n_starts(self) -> int:
+        return self.graph.n
+
+    def start_batches(self, config: ExecutorConfig):
+        gbatch = -(-config.batch // self.S) * self.S
+        yield from start_id_batches(self.graph.n, gbatch)
+
+    def universe_chunks(self, config: ExecutorConfig):
+        return self._uni
+
+    def initial_caps(self, config: ExecutorConfig) -> Tuple[int, ...]:
+        return self._caps0
+
+    def escalate_requests(self) -> None:
+        self.req_cap *= 2
+
+    def _step(self, caps: Tuple[int, ...], req_cap: int) -> Callable:
+        key = (caps, req_cap)
+        if key not in self._steps:
+            from .engine_dist import build_distributed_step
+            self._steps[key] = build_distributed_step(
+                self.plan, self.spec, self.mesh, self._axis, caps, req_cap,
+                rebalance=self._rebalance, intersect_impl=self._intersect)
+        return self._steps[key]
+
+    def run_chunk(self, ids, valid, universe_chunk, caps) -> ChunkResult:
+        import jax
+        import jax.numpy as jnp
+        args = [self.shards, self.hot_rows,
+                jax.device_put(jnp.asarray(ids), self._id_sharding),
+                jax.device_put(jnp.asarray(valid), self._id_sharding)]
+        if universe_chunk is not None:
+            args.append(universe_chunk)
+        counts, overflow, cold, drops, levels = self._step(
+            caps, self.req_cap)(*args)
+        ov = int(np.sum(np.asarray(overflow)))
+        dr = int(np.sum(np.asarray(drops)))
+        if ov == 0 and dr == 0:
+            counts64 = np.asarray(counts, dtype=np.int64)
+            self._per_shard += counts64
+            self._cold += int(np.sum(np.asarray(cold)))
+            lv = np.asarray(levels)
+            self._level_acc = (lv if self._level_acc is None
+                               else self._level_acc + lv)
+            return ChunkResult(count=int(counts64.sum()))
+        return ChunkResult(count=0, overflow=ov, drops=dr)
+
+    def finalize(self, stats: ExecStats) -> None:
+        stats.extras.update(
+            per_shard_counts=self._per_shard,
+            per_shard_level_sizes=(
+                self._level_acc if self._level_acc is not None
+                else np.zeros((0, self.S))),
+            cold_rows_fetched=self._cold)
+
+
+# --------------------------------------------------------------------------
+# Backend: S-BENU continuous enumeration (delta tasks on a SnapshotStore)
+# --------------------------------------------------------------------------
+
+
+class SBenuBackend(ExecutorBackend):
+    """Delta enumeration over a SnapshotStore (core/sbenu.py).
+
+    Start vertices are the batch's update endpoints; heavy tasks θ-split on
+    their delta adjacency list. Source = a begun SnapshotStore; plan = the
+    list of incremental plans for every ΔP_i.
+    """
+
+    name = "sbenu"
+    splittable = True
+
+    def __init__(self, pattern: Pattern, cache_capacity: Optional[int] = None,
+                 collect: str = "matches"):
+        self._pattern = pattern
+        self._cache_capacity = cache_capacity
+        self._collect = collect
+        self.engine = None
+
+    def prepare(self, plans: Sequence[Plan], source,
+                config: ExecutorConfig) -> None:
+        from .sbenu import SBenuRefEngine
+        self.store = source
+        self.sentinel = -1
+        self._starts = np.asarray(sorted(source.start_vertices()), np.int32)
+        self.engine = SBenuRefEngine(plans, self._pattern, source,
+                                     collect=self._collect,
+                                     cache_capacity=self._cache_capacity)
+        self._theta = config.theta
+
+    def start_batches(self, config: ExecutorConfig):
+        n = self._starts.shape[0]
+        for s0 in range(0, max(n, 1), config.batch):
+            ids = self._starts[s0:s0 + config.batch]
+            if ids.shape[0] == 0:
+                return
+            yield ids, np.ones(ids.shape[0], bool)
+
+    def run_chunk(self, ids, valid, universe_chunk, caps) -> ChunkResult:
+        eng = self.engine
+        c0 = eng.counters.matches_plus + eng.counters.matches_minus
+        eng.run_starts(ids[valid], theta=self._theta)
+        c1 = eng.counters.matches_plus + eng.counters.matches_minus
+        return ChunkResult(count=c1 - c0)
+
+    def finalize(self, stats: ExecStats) -> None:
+        stats.extras.update(
+            delta_plus=set(self.engine.delta_plus),
+            delta_minus=set(self.engine.delta_minus),
+            counters=self.engine.counters)
+
+
+# --------------------------------------------------------------------------
+# Factory + dry-run hook
+# --------------------------------------------------------------------------
+
+
+BACKENDS = {
+    "ref": RefBackend,
+    "jax": JaxBackend,
+    "dist": DistBackend,
+    "sbenu": SBenuBackend,
+}
+
+
+def make_executor(engine: str, **backend_kwargs) -> Executor:
+    """``make_executor('dist', hot=64, rebalance=True).run(plan, graph)``."""
+    try:
+        cls = BACKENDS[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {engine!r}; choose from {sorted(BACKENDS)}")
+    return Executor(cls(**backend_kwargs))
+
+
+def build_benu_step(plan: Plan, spec, mesh, axis, caps: Sequence[int],
+                    req_cap: int, rebalance: bool = True):
+    """The distributed enumeration step the dry-run lowers for the BENU
+    cell — the same step :class:`DistBackend` executes, exposed so
+    launch/steps.py routes through the unified API."""
+    from .engine_dist import build_distributed_step
+    return build_distributed_step(plan, spec, mesh, axis, list(caps),
+                                  req_cap, rebalance=rebalance)

@@ -104,6 +104,27 @@ class Task:
     c2_slice: Optional[Tuple[int, int]] = None   # (begin, end) into sorted C2
 
 
+def tasks_for_starts(plan: Plan, pattern: Pattern, graph: Graph,
+                     starts: Iterable[int],
+                     theta: Optional[int] = None) -> List[Task]:
+    """Local search tasks for ``starts``; heavy tasks split by θ into C2
+    slices. The single task-split rule shared by RefEngine.run and the
+    unified Executor's ref backend."""
+    k1, k2 = plan.matching_order[:2]
+    adjacent12 = k2 in pattern.adj[k1]
+    tasks: List[Task] = []
+    for v in starts:
+        v = int(v)
+        base = int(graph.deg[v]) if adjacent12 else graph.n
+        if theta is not None and base > theta:
+            n_sub = -(-base // theta)
+            for s in range(n_sub):
+                tasks.append(Task(v, (s * theta, min((s + 1) * theta, base))))
+        else:
+            tasks.append(Task(v))
+    return tasks
+
+
 def make_tasks(plan: Plan, graph: Graph,
                theta: Optional[int] = None) -> List[Task]:
     """One task per data vertex; heavy tasks split by degree threshold θ."""
@@ -163,18 +184,8 @@ class RefEngine:
     def run(self, tasks: Optional[Sequence[Task]] = None,
             theta: Optional[int] = None) -> Counters:
         if tasks is None:
-            k1, k2 = self.plan.matching_order[:2]
-            adjacent12 = k2 in self.pattern.adj[k1]
-            tasks = []
-            for v in range(self.graph.n):
-                base = int(self.graph.deg[v]) if adjacent12 else self.graph.n
-                if theta is not None and base > theta:
-                    n_sub = -(-base // theta)
-                    for s in range(n_sub):
-                        tasks.append(Task(v, (s * theta,
-                                              min((s + 1) * theta, base))))
-                else:
-                    tasks.append(Task(v))
+            tasks = tasks_for_starts(self.plan, self.pattern, self.graph,
+                                     range(self.graph.n), theta=theta)
         for task in tasks:
             self._run_task(task)
         return self.counters

@@ -325,7 +325,14 @@ class SBenuRefEngine:
     # ------------------------------------------------------------------ run
     def run_timestep(self, theta: Optional[int] = None) -> None:
         """Enumerate ΔR_t^± for the store's current (begun) step."""
-        for start in self.store.start_vertices():
+        self.run_starts(self.store.start_vertices(), theta=theta)
+
+    def run_starts(self, starts, theta: Optional[int] = None) -> None:
+        """Run the local search tasks for ``starts``; heavy tasks θ-split
+        on their delta adjacency list. The single task-split rule shared
+        with the unified Executor's sbenu backend."""
+        for start in starts:
+            start = int(start)
             delta_out = self.store.delta_adj_out(start)
             if theta is not None and len(delta_out) > theta:
                 n_sub = -(-len(delta_out) // theta)
@@ -475,16 +482,24 @@ class SBenuRefEngine:
 def run_timestep(pattern: Pattern, plans: Sequence[Plan],
                  store: SnapshotStore, batch: Sequence[Update],
                  theta: Optional[int] = None,
-                 cache_capacity: Optional[int] = None
+                 cache_capacity: Optional[int] = None,
+                 chunk: int = 64
                  ) -> Tuple[Set[Tuple[int, ...]], Set[Tuple[int, ...]],
                             SBenuCounters]:
-    """One full Alg. 4 iteration: pre-process, enumerate, post-process."""
+    """One full Alg. 4 iteration: pre-process, enumerate, post-process.
+
+    The enumeration sub-phase routes through the unified Executor API
+    (core/executor.py): start vertices of the update batch are chunked by
+    the shared driver, heavy tasks θ-split on their delta adjacency list.
+    """
+    from .executor import ExecutorConfig, SBenuBackend, drive
     store.begin_step(batch)
-    eng = SBenuRefEngine(plans, pattern, store,
-                         cache_capacity=cache_capacity)
-    eng.run_timestep(theta=theta)
+    backend = SBenuBackend(pattern, cache_capacity=cache_capacity)
+    st = drive(backend, list(plans), store,
+               ExecutorConfig(batch=chunk, theta=theta))
     store.end_step()
-    return set(eng.delta_plus), set(eng.delta_minus), eng.counters
+    return (st.extras["delta_plus"], st.extras["delta_minus"],
+            st.extras["counters"])
 
 
 # --------------------------------------------------------------------------

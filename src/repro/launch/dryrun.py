@@ -51,8 +51,10 @@ def analyze_cell(arch: str, shape: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
+    from ..compat import cost_analysis_dict
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    # list-of-dicts on older jax; one dict on newer — normalize
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
 
     # loop-aware accounting (XLA's cost_analysis counts while bodies once —

@@ -2,12 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.enumerate \
         --pattern chordal-square --n 2000 --edges 8000 [--devices 8] \
-        [--hot 64] [--rebalance] [--vcbc]
+        [--engine dist|jax|ref] [--hot 64] [--rebalance] [--vcbc]
 
 Generates a synthetic graph, compiles the best execution plan (Alg. 3 with
-all optimizations), and runs the distributed frontier engine over every
-device, reporting counts + the paper's cost metrics (DBQ rows crossed /
-computation per shard / skew).
+all optimizations), and runs the chosen engine through the unified
+Executor API (core/executor.py) over every device, reporting counts + the
+paper's cost metrics (DBQ rows crossed / computation per shard / skew).
 """
 
 from __future__ import annotations
@@ -24,6 +24,8 @@ def main():
     ap.add_argument("--edges", type=int, default=8000)
     ap.add_argument("--graph", choices=["er", "powerlaw"],
                     default="powerlaw")
+    ap.add_argument("--engine", choices=["dist", "jax", "ref"],
+                    default="dist")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (set before jax init)")
     ap.add_argument("--batch-per-shard", type=int, default=256)
@@ -37,7 +39,9 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
-    from ..core.engine_dist import enumerate_distributed
+    import jax
+
+    from ..core.executor import make_executor
     from ..core.pattern import get_pattern
     from ..core.plangen import generate_best_plan
     from ..graph.generate import erdos_renyi, powerlaw
@@ -48,18 +52,29 @@ def main():
          else erdos_renyi(args.n, args.edges, seed=args.seed))
     plan = generate_best_plan(P, g.stats(), vcbc=args.vcbc)
     print(plan.pretty())
+
+    if args.engine == "dist":
+        ex = make_executor("dist", hot=args.hot, rebalance=args.rebalance)
+        batch = args.batch_per_shard * len(jax.devices())
+    else:
+        ex = make_executor(args.engine)
+        batch = args.batch_per_shard
     t0 = time.time()
-    st = enumerate_distributed(plan, g,
-                               batch_per_shard=args.batch_per_shard,
-                               hot=args.hot, rebalance=args.rebalance)
+    st = ex.run(plan, g, batch=batch)
     dt = time.time() - t0
-    print(f"\nmatches            : {st.count}")
+    print(f"\nengine             : {args.engine}")
+    print(f"matches            : {st.count}")
     print(f"wall time          : {dt:.2f}s")
-    print(f"cold rows fetched  : {st.cold_rows_fetched} "
-          f"(x {plan.n * 4}B row bytes = "
-          f"{st.cold_rows_fetched * 512 / 1e6:.1f}MB class)")
-    print(f"per-shard matches  : {st.per_shard_counts.tolist()}")
-    print(f"chunks retried     : {st.chunks_retried}")
+    print(f"chunks run         : {st.chunks_run} "
+          f"(split {st.chunks_split}, retried {st.chunks_retried})")
+    if args.engine == "dist":
+        cold = st.extras["cold_rows_fetched"]
+        print(f"cold rows fetched  : {cold} "
+              f"(x {plan.n * 4}B row bytes = {cold * 512 / 1e6:.1f}MB class)")
+        print(f"per-shard matches  : "
+              f"{st.extras['per_shard_counts'].tolist()}")
+    elif args.engine == "ref":
+        print(f"remote DBQ rows    : {st.extras['remote_queries']}")
 
 
 if __name__ == "__main__":

@@ -289,7 +289,7 @@ def _rec_cell(spec: ArchSpec, shape: str, mesh: Mesh,
 
 def _benu_cell(spec: ArchSpec, shape: str, mesh: Mesh,
                multi_pod: bool) -> CellProgram:
-    from ..core.engine_dist import build_distributed_step
+    from ..core.executor import build_benu_step
     from ..core.estimate import GraphStats
     from ..core.pattern import get_pattern
     from ..core.plangen import generate_best_plan
@@ -311,8 +311,8 @@ def _benu_cell(spec: ArchSpec, shape: str, mesh: Mesh,
     caps = [cfg.batch_per_shard * cfg.cap_mult[min(i, len(cfg.cap_mult) - 1)]
             for i in range(n_enu)]
     caps = [-(-c // n_shards) * n_shards for c in caps]
-    step = build_distributed_step(plan, store, mesh, axis, caps,
-                                  cfg.req_cap, rebalance=True)
+    step = build_benu_step(plan, store, mesh, axis, caps,
+                           cfg.req_cap, rebalance=True)
     ispecs = spec.input_specs(shape)
     # re-derive specs against the actual mesh shard count
     ispecs = {

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from ..layers.mlp import mlp_apply
 from .gnn import GNNConfig, _ln
 
@@ -273,9 +274,9 @@ def build_dist_loss(cfg: GNNConfig, mesh: Mesh, n_total: int,
     def loss_fn(params, batch):
         rep = jax.tree.map(lambda _: P(), params)
         bspecs = {k: batch_spec_for(k, v.ndim) for k, v in batch.items()}
-        fn = jax.shard_map(local, mesh=mesh, in_specs=(rep, bspecs),
-                           out_specs=(P(), {"loss": P()}),
-                           check_vma=False)
+        fn = shard_map(local, mesh=mesh, in_specs=(rep, bspecs),
+                       out_specs=(P(), {"loss": P()}),
+                       check_vma=False)
         return fn(params, batch)
 
     return loss_fn, batch_spec_for

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import shard_map
 from ..distributed.compression import compressed_psum, plain_psum_mean
 from .checkpoint import CheckpointManager
 from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
@@ -92,7 +93,7 @@ def run_training(loss_fn: Callable,
             return new_params, new_opt, err, metrics
 
         rep = jax.tree.map(lambda _: P(), state["params"])
-        step_fn = jax.jit(jax.shard_map(
+        step_fn = jax.jit(shard_map(
             local_step, mesh=mesh,
             in_specs=(rep, jax.tree.map(lambda _: P(), state["opt"]),
                       rep, P(dp_axis)),

@@ -1,0 +1,256 @@
+"""Cross-engine conformance through the unified Executor API.
+
+Every backend (ref / jax / dist) runs the same plan through the same
+driver, so match counts must agree exactly — the correctness bar for
+distributed subgraph matching is exact agreement, not approximation. Also
+unit-tests the adaptive task-splitting driver itself: forced ENU overflow
+must re-chunk the offending start batch (smaller frontiers, same
+capacities) and never drop or duplicate a match.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.executor import (ChunkResult, ExecStats, Executor,
+                                 ExecutorBackend, ExecutorConfig, drive,
+                                 make_executor, plan_enu_count,
+                                 split_id_batch)
+from repro.core.pattern import get_pattern
+from repro.core.plangen import generate_best_plan
+from repro.core.ref_engine import enumerate_matches_brute
+from repro.core.symmetry import symmetry_breaking_constraints
+from repro.graph.generate import erdos_renyi, powerlaw
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# triangle, 4-cycle, 4-clique, 5-vertex house
+PATTERNS = ["triangle", "square", "clique4", "house"]
+GRAPHS = {
+    "er": erdos_renyi(64, 256, seed=11),
+    "pl": powerlaw(64, 4, seed=12),
+}
+
+
+def brute_count(pname, g):
+    p = get_pattern(pname)
+    return len(enumerate_matches_brute(
+        p, g, symmetry_breaking_constraints(p)))
+
+
+# --------------------------------------------------------------------------
+# ref == jax on every pattern x graph (single device, in process)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pname", PATTERNS)
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_ref_jax_conformance_unified_api(pname, gname):
+    g = GRAPHS[gname]
+    p = get_pattern(pname)
+    plan = generate_best_plan(p, g.stats())
+    ref = make_executor("ref").run(plan, g, batch=32)
+    jx = make_executor("jax").run(plan, g, batch=32)
+    want = brute_count(pname, g)
+    assert ref.count == jx.count == want, (pname, gname)
+
+
+# --------------------------------------------------------------------------
+# ref == jax == dist (8 forced host devices, one subprocess for all runs)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_three_engine_conformance_exact():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent("""
+        import json
+        from repro.core.executor import make_executor
+        from repro.core.pattern import get_pattern
+        from repro.core.plangen import generate_best_plan
+        from repro.core.ref_engine import enumerate_matches_brute
+        from repro.core.symmetry import symmetry_breaking_constraints
+        from repro.graph.generate import powerlaw
+        g = powerlaw(100, 4, seed=4)
+        res = {}
+        for pname in ("triangle", "square", "clique4", "house"):
+            P = get_pattern(pname)
+            plan = generate_best_plan(P, g.stats())
+            brute = len(enumerate_matches_brute(
+                P, g, symmetry_breaking_constraints(P)))
+            ref = make_executor("ref").run(plan, g, batch=32).count
+            jx = make_executor("jax").run(plan, g, batch=32).count
+            ds = make_executor("dist", hot=8, rebalance=True).run(
+                plan, g, batch=64).count
+            res[pname] = dict(brute=brute, ref=ref, jax=jx, dist=ds)
+        print(json.dumps(res))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert set(res) == set(PATTERNS)
+    for pname, r in res.items():
+        assert r["ref"] == r["jax"] == r["dist"] == r["brute"], (pname, r)
+
+
+# --------------------------------------------------------------------------
+# Adaptive task splitting: forced ENU overflow re-chunks, never drops
+# --------------------------------------------------------------------------
+
+
+def test_forced_overflow_rechunks_and_stays_exact():
+    p = get_pattern("house")
+    g = GRAPHS["pl"]
+    plan = generate_best_plan(p, g.stats())
+    n_enu = plan_enu_count(plan)
+    want = brute_count("house", g)
+    # capacities far too small for a 16-start batch: the driver must split
+    st = make_executor("jax").run(plan, g, batch=16, caps=[8] * n_enu,
+                                  max_retries=12)
+    assert st.count == want
+    assert st.chunks_split > 0          # it re-chunked (did not just pad)
+    assert st.chunks_run > st.chunks_split
+
+
+def test_forced_overflow_match_set_exact_not_just_count():
+    """Re-chunking must neither drop nor duplicate matches."""
+    p = get_pattern("clique4")
+    g = GRAPHS["er"]
+    plan = generate_best_plan(p, g.stats())
+    n_enu = plan_enu_count(plan)
+    ref = make_executor("ref").run(plan, g, batch=32, collect_matches=True)
+    jx = make_executor("jax").run(plan, g, batch=16, caps=[8] * n_enu,
+                                  max_retries=12, collect_matches=True)
+    got = {tuple(int(x) for x in row) for row in jx.matches}
+    want = {tuple(int(x) for x in row) for row in ref.matches}
+    assert got == want
+    assert len(jx.matches) == len(got)  # no duplicates emitted
+
+
+def test_overflow_disables_split_falls_back_to_caps():
+    """adaptive_split=False reproduces the legacy capacity-doubling path."""
+    p = get_pattern("house")
+    g = GRAPHS["pl"]
+    plan = generate_best_plan(p, g.stats())
+    n_enu = plan_enu_count(plan)
+    want = brute_count("house", g)
+    st = make_executor("jax").run(plan, g, batch=16, caps=[8] * n_enu,
+                                  max_retries=12, adaptive_split=False)
+    assert st.count == want
+    assert st.chunks_split == 0 and st.chunks_retried > 0
+
+
+# --------------------------------------------------------------------------
+# Driver unit tests on a deterministic fake backend (no jax involved)
+# --------------------------------------------------------------------------
+
+
+class FakeBackend(ExecutorBackend):
+    """Each valid start yields exactly one match; a chunk 'overflows'
+    whenever its demand (valid starts x fanout) exceeds caps[0]."""
+
+    name = "fake"
+    granularity = 1
+
+    def __init__(self, n, fanout=1):
+        self.n = n
+        self.fanout = fanout
+        self.seen = []                     # ids from successful chunks
+        self.runs = 0
+
+    def prepare(self, plan, source, config):
+        self.sentinel = self.n
+
+    def _n_starts(self):
+        return self.n
+
+    def initial_caps(self, config):
+        return tuple(config.caps) if config.caps else (1,)
+
+    def run_chunk(self, ids, valid, universe_chunk, caps):
+        self.runs += 1
+        nv = int(valid.sum())
+        demand = nv * self.fanout
+        if demand > caps[0]:
+            return ChunkResult(count=0, overflow=demand - caps[0])
+        self.seen.extend(int(v) for v in ids[valid])
+        return ChunkResult(count=nv)
+
+
+def test_driver_splits_to_fit_and_loses_nothing():
+    be = FakeBackend(n=37)
+    st = drive(be, None, None, ExecutorConfig(batch=16, caps=(2,)))
+    assert st.count == 37
+    assert sorted(be.seen) == list(range(37))      # every start exactly once
+    assert st.chunks_split > 0
+    assert st.chunks_retried == 0      # splitting alone fits caps=2
+
+
+def test_driver_grows_caps_only_when_unsplittable():
+    # fanout 4 with caps=1: even a single start overflows until caps reach 4
+    be = FakeBackend(n=5, fanout=4)
+    st = drive(be, None, None, ExecutorConfig(batch=4, caps=(1,)))
+    assert st.count == 5
+    assert sorted(be.seen) == list(range(5))
+    assert st.chunks_retried > 0       # capacity-doubling was required
+    assert st.chunks_split > 0         # after splitting down to singletons
+
+
+def test_driver_raises_after_retry_budget():
+    class AlwaysOverflow(FakeBackend):
+        def run_chunk(self, ids, valid, universe_chunk, caps):
+            return ChunkResult(count=0, overflow=1)
+
+    be = AlwaysOverflow(n=4)
+    with pytest.raises(RuntimeError, match="overflowed"):
+        drive(be, None, None,
+              ExecutorConfig(batch=4, caps=(1,), max_retries=3))
+
+
+def test_split_id_batch_partitions_valid_ids():
+    ids = np.arange(16, dtype=np.int32)
+    valid = (ids % 3 != 0)
+    halves = split_id_batch(ids, valid, granularity=1, sentinel=99)
+    assert halves is not None and len(halves) == 2
+    got = []
+    for h_ids, h_valid in halves:
+        assert h_ids.shape == (8,) and h_valid.shape == (8,)
+        got.extend(int(v) for v in h_ids[h_valid])
+    assert sorted(got) == sorted(int(v) for v in ids[valid])
+
+
+def test_split_id_batch_odd_full_batch_drops_nothing():
+    # B=5 all valid: halves get ceil(5/2)=3 and 2 ids — shape must fit 3
+    ids = np.arange(5, dtype=np.int32)
+    valid = np.ones(5, bool)
+    halves = split_id_batch(ids, valid, granularity=1, sentinel=99)
+    got = sorted(int(v) for h_ids, h_valid in halves
+                 for v in h_ids[h_valid])
+    assert got == list(range(5))
+
+
+def test_driver_exact_with_odd_batch_under_overflow():
+    be = FakeBackend(n=23)
+    st = drive(be, None, None, ExecutorConfig(batch=7, caps=(2,)))
+    assert st.count == 23
+    assert sorted(be.seen) == list(range(23))
+
+
+def test_split_id_batch_respects_granularity_and_floor():
+    ids = np.arange(16, dtype=np.int32)
+    valid = np.ones(16, bool)
+    halves = split_id_batch(ids, valid, granularity=8, sentinel=99)
+    assert all(h[0].shape == (8,) for h in halves)
+    # a mesh-wide batch (B == granularity) cannot shrink further
+    assert split_id_batch(ids[:8], valid[:8], granularity=8,
+                          sentinel=99) is None
+    assert split_id_batch(ids[:1], valid[:1], granularity=1,
+                          sentinel=99) is None

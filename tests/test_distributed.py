@@ -66,6 +66,7 @@ def test_rowstore_fetch_unit():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp, json
         from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+        from repro.compat import shard_map
         from repro.distributed.rowstore import (build_row_shards,
                                                 make_distributed_fetch)
         from repro.graph.generate import erdos_renyi
@@ -82,7 +83,7 @@ def test_rowstore_fetch_unit():
             rows, cold, drops = fetch(ids[0], shards[0], hot)
             return rows[None], cold[None], drops[None]
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             local, mesh=mesh,
             in_specs=(P("s", None, None), P(None, None), P("s", None)),
             out_specs=(P("s", None, None), P("s"), P("s")),
@@ -107,6 +108,7 @@ def test_int8_compressed_psum_error_feedback():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp, json
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
         from repro.distributed.compression import (compressed_psum,
                                                    plain_psum_mean)
         mesh = Mesh(np.array(jax.devices()), ("d",))
@@ -118,7 +120,7 @@ def test_int8_compressed_psum_error_feedback():
             r2, err2 = compressed_psum({"w": gl}, "d", {"w": err})
             return r1["w"][None], r2["w"][None], err2["w"][None]
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             step, mesh=mesh, in_specs=(P("d", None), P("d", None)),
             out_specs=(P("d", None), P("d", None), P("d", None)),
             check_vma=False))
@@ -143,7 +145,7 @@ def test_production_mesh_construction():
         from repro.launch.mesh import make_production_mesh
         m1 = make_production_mesh()
         m2 = make_production_mesh(multi_pod=True)
-        print(m1.shape, m2.shape)
+        print(dict(m1.shape), dict(m2.shape))
     """, devices=512, timeout=180)
     assert "'data': 16, 'model': 16" in out
     assert "'pod': 2" in out

@@ -6,6 +6,9 @@ import itertools
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis dev dep")
 from hypothesis import HealthCheck, assume, given, settings
 from hypothesis import strategies as st
 

@@ -1,22 +1,103 @@
-"""Fig. 12 reproduction: S-BENU incremental enumeration vs recompute-from-
-scratch, per time step (the Delta-BiGJoin comparison class)."""
+"""Fig. 12 reproduction + streaming-engine throughput: S-BENU per time step.
+
+Two comparisons, both per time step of a random update stream:
+
+* interpreter (``SBenuRefEngine`` behind the unified Executor) vs the
+  vectorized JIT delta-frontier engine (``sbenu-jax``) — the headline of
+  the vectorization work: >= 10x on a >= 10k-vertex dynamic graph;
+* incremental enumeration vs recompute-from-scratch (the Delta-BiGJoin
+  comparison class) — kept from the original Fig. 12 table.
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/sbenu_bench.py \
+        [--n 10000 --edges 50000 --steps 3 --update-batch 2000]
+    PYTHONPATH=src python benchmarks/sbenu_bench.py --smoke   # CI gate
+
+``--smoke`` runs a small stream and *asserts* count conformance between the
+interpreter and the JIT engine, so every push exercises the streaming path.
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 from repro.core.estimate import GraphStats
+from repro.core.executor import SBenuJaxBackend
 from repro.core.pattern import get_pattern
 from repro.core.sbenu import (enumerate_matches_digraph,
                               generate_best_sbenu_plans, run_timestep)
 from repro.core.symmetry import symmetry_breaking_constraints
-from repro.graph.dynamic import SnapshotStore
+from repro.graph.dynamic import SnapshotStore, stream_width_floors
 from repro.graph.generate import edge_stream
 
-from .common import Table
+try:
+    from .common import Table
+except ImportError:                      # run as a script: python benchmarks/…
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import Table
+
+
+def bench_stream(pname: str, n: int, m_init: int, steps: int,
+                 update_batch: int, seed: int = 5, chunk: int = 1024,
+                 run_ref: bool = True, table: Table = None) -> float:
+    """Run one stream on both engines; returns the steady-state speedup
+    (interpreter time / JIT time, excluding the compile step)."""
+    p = get_pattern(pname)
+    g0, batches = edge_stream(n=n, m_init=m_init, steps=steps,
+                              batch=update_batch, seed=seed)
+    stats = GraphStats(n, m_init, delta_edges=update_batch)
+    plans = generate_best_sbenu_plans(p, stats)
+    d, dd = stream_width_floors(g0, batches)
+    store_ref = SnapshotStore(g0)
+    store_jax = SnapshotStore(g0)
+    backend = SBenuJaxBackend(collect="counts", d_min=d, delta_d_min=dd)
+    speedups = []
+    for step, batch in enumerate(batches, 1):
+        if run_ref:
+            t0 = time.perf_counter()
+            _, _, ctr_r = run_timestep(p, plans, store_ref, batch,
+                                       engine="ref", collect="counts",
+                                       chunk=chunk)
+            t_ref = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, _, ctr_j = run_timestep(p, plans, store_jax, batch,
+                                   collect="counts", chunk=chunk,
+                                   backend=backend)
+        t_jit = time.perf_counter() - t0
+        if run_ref:
+            assert (ctr_r.matches_plus, ctr_r.matches_minus) == \
+                (ctr_j.matches_plus, ctr_j.matches_minus), \
+                f"engine mismatch at step {step}"
+            sp = t_ref / max(t_jit, 1e-9)
+            if step > 1:                  # step 1 pays JIT compilation
+                speedups.append(sp)
+            if table is not None:
+                table.add(pname, step, ctr_j.matches_plus,
+                          ctr_j.matches_minus, f"{t_ref:.3f}",
+                          f"{t_jit:.3f}", f"{sp:.1f}x")
+        elif table is not None:
+            table.add(pname, step, ctr_j.matches_plus, ctr_j.matches_minus,
+                      "-", f"{t_jit:.3f}", "-")
+    return (sum(speedups) / len(speedups)) if speedups else 0.0
 
 
 def run() -> Table:
+    t = Table("Fig. 12 + streaming engines: interpreter vs sbenu-jax "
+              "(per step)",
+              ["pattern", "step", "dR+", "dR-", "interp s", "jit s",
+               "speedup"])
+    for pname in ("q1'", "q3'"):
+        bench_stream(pname, n=2000, m_init=10000, steps=3,
+                     update_batch=400, table=t)
+    return t
+
+
+def run_scratch() -> Table:
+    """The original Fig. 12 competitor: recompute-from-scratch."""
     t = Table("Fig. 12: S-BENU vs recompute-from-scratch (per step)",
               ["pattern", "step", "dR+", "dR-", "sbenu s", "scratch s",
                "speedup"])
@@ -33,7 +114,6 @@ def run() -> Table:
             t0 = time.perf_counter()
             dp, dm, _ = run_timestep(p, plans, store, batch)
             t_inc = time.perf_counter() - t0
-            # recompute-from-scratch competitor
             cur = store.snapshot("prev")
             t0 = time.perf_counter()
             r_prev = enumerate_matches_digraph(p, prev, cons)
@@ -46,5 +126,50 @@ def run() -> Table:
     return t
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="q1'")
+    ap.add_argument("--n", type=int, default=10000)
+    ap.add_argument("--edges", type=int, default=50000)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--update-batch", type=int, default=2000)
+    ap.add_argument("--chunk", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--no-ref", action="store_true",
+                    help="skip the interpreter (large streams)")
+    ap.add_argument("--scratch", action="store_true",
+                    help="also run the Fig. 12 recompute-from-scratch "
+                         "comparison")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small stream + conformance assert (CI gate)")
+    args = ap.parse_args()
+    if args.smoke:
+        t = Table("sbenu_bench --smoke: interpreter vs sbenu-jax",
+                  ["pattern", "step", "dR+", "dR-", "interp s", "jit s",
+                   "speedup"])
+        for pname in ("q1'", "q3'"):
+            bench_stream(pname, n=300, m_init=1500, steps=2,
+                         update_batch=100, seed=args.seed, chunk=64,
+                         table=t)
+        t.show()
+        run_scratch().show()             # asserts vs the snapshot diff
+        print("smoke OK: interpreter == sbenu-jax on every step, "
+              "incremental == recompute-from-scratch diff")
+        return
+    if args.scratch:
+        run_scratch().show()
+    t = Table(f"S-BENU streaming engines on n={args.n} m={args.edges} "
+              f"({args.update_batch} updates/step)",
+              ["pattern", "step", "dR+", "dR-", "interp s", "jit s",
+               "speedup"])
+    sp = bench_stream(args.pattern, n=args.n, m_init=args.edges,
+                      steps=args.steps, update_batch=args.update_batch,
+                      seed=args.seed, chunk=args.chunk,
+                      run_ref=not args.no_ref, table=t)
+    t.show()
+    if not args.no_ref:
+        print(f"\nsteady-state speedup (steps >= 2): {sp:.1f}x")
+
+
 if __name__ == "__main__":
-    run().show()
+    main()

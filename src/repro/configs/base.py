@@ -104,6 +104,18 @@ class ArchSpec:
                         "cand_ids": sds((pad512(d["n_candidates"]),), i32)}
             return base
         if fam == "benu":
+            if sp.kind == "sbenu_enum":
+                n1, D, Dd = d["n_vertices"] + 1, d["row_width"], \
+                    d["delta_width"]
+                specs = {k: sds((n1, D), i32)
+                         for k in ("prev_out", "prev_in",
+                                   "cur_out", "cur_in")}
+                specs.update({k: sds((n1, Dd), i32)
+                              for k in ("delta_out", "delta_out_sign",
+                                        "delta_in", "delta_in_sign")})
+                specs["starts"] = sds((d["batch"],), i32)
+                specs["starts_valid"] = sds((d["batch"],), jnp.bool_)
+                return specs
             S = d["n_shards"]
             return {
                 "shards": sds((S, d["rows_per_shard"], d["row_width"]), i32),

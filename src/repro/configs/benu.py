@@ -25,6 +25,11 @@ class BenuEnumConfig:
     batch_per_shard: int = 4096          # start vertices per device
     req_cap: int = 512                   # all_to_all per-peer budget
     cap_mult: (int, ...) = (8, 16, 16)   # per-ENU capacity x batch
+    # S-BENU (streaming) cell
+    sbenu_pattern: str = "q1'"           # directed pattern of the delta cell
+    sbenu_n_vertices: int = 1 << 24      # 16M-vertex dynamic graph
+    delta_width: int = 16                # padded delta adjacency width
+    sbenu_batch: int = 8192              # touched start vertices per step
 
 
 def _shapes(cfg: BenuEnumConfig, n_shards: int) -> Dict[str, ShapeSpec]:
@@ -36,6 +41,12 @@ def _shapes(cfg: BenuEnumConfig, n_shards: int) -> Dict[str, ShapeSpec]:
              "row_width": cfg.row_width, "hot": cfg.hot,
              "batch_per_shard": cfg.batch_per_shard},
             note="one distributed frontier step over the full mesh"),
+        "sbenu_delta_16m": ShapeSpec(
+            "sbenu_delta_16m", "sbenu_enum",
+            {"n_vertices": cfg.sbenu_n_vertices,
+             "row_width": cfg.row_width, "delta_width": cfg.delta_width,
+             "batch": cfg.sbenu_batch},
+            note="one vectorized Delta-P_1 step over the dual snapshot"),
     }
 
 
@@ -44,7 +55,9 @@ CONFIG = BenuEnumConfig()
 
 def _smoke() -> ArchSpec:
     cfg = BenuEnumConfig(name="benu-smoke", n_vertices=512, row_width=128,
-                         hot=16, batch_per_shard=64, req_cap=64)
+                         hot=16, batch_per_shard=64, req_cap=64,
+                         sbenu_n_vertices=512, delta_width=8,
+                         sbenu_batch=64)
     return ArchSpec(name="benu/smoke", family="benu", model_cfg=cfg,
                     shapes=_shapes(cfg, n_shards=1))
 

@@ -138,10 +138,15 @@ def _apply_filters(sets: jax.Array, filters, env: Dict[Var, jax.Array],
 
 def _expand(env: Dict[Var, jax.Array], valid: jax.Array,
             cand: jax.Array, target: Var, cap: int, live: frozenset,
-            sentinel: int, compaction: str = "cumsum"
+            sentinel: int, compaction: str = "cumsum",
+            extra_cols: Optional[Dict[Var, jax.Array]] = None
             ) -> Tuple[Dict[Var, jax.Array], jax.Array, jax.Array]:
     """ENU: frontier [B] -> child frontier [cap]. Returns (env', valid',
     overflow_count).
+
+    ``extra_cols`` maps extra per-candidate columns (``[B, D]`` aligned with
+    ``cand``) to env vars of the child frontier — the S-BENU Delta-ENU uses
+    this to carry each candidate's ± snapshot selector alongside its vertex.
 
     Compaction of the valid children to the front:
       * "cumsum": positions by prefix-sum + one scatter — O(n) HBM traffic.
@@ -178,6 +183,9 @@ def _expand(env: Dict[Var, jax.Array], valid: jax.Array,
         if v in live:
             new_env[v] = arr[parents]
     new_env[target] = jnp.where(new_valid, flat[take], sentinel)
+    if extra_cols:
+        for v, arr in extra_cols.items():
+            new_env[v] = jnp.where(new_valid, arr.reshape(n)[take], 0)
     return new_env, new_valid, overflow
 
 

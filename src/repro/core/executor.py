@@ -50,6 +50,11 @@ from .pattern import Pattern
 # --------------------------------------------------------------------------
 
 
+def ceil_div(a: int, b: int) -> int:
+    """``ceil(a / b)`` for non-negative ints (no float detour)."""
+    return -(-a // b)
+
+
 def start_id_batches(n: int, batch: int,
                      sentinel: Optional[int] = None
                      ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
@@ -89,7 +94,7 @@ def split_id_batch(ids: np.ndarray, valid: np.ndarray, granularity: int,
     B = ids.shape[0]
     # ceil(B/2) rounded up to granularity: a half always fits its
     # ceil(nv/2) valid ids — no start may ever be truncated away
-    half = -(-(-(-B // 2)) // granularity) * granularity if B > 1 else 0
+    half = ceil_div(ceil_div(B, 2), granularity) * granularity if B > 1 else 0
     if half < granularity or half >= B:
         return None
     vids = ids[valid]
@@ -590,6 +595,168 @@ class SBenuBackend(ExecutorBackend):
 
 
 # --------------------------------------------------------------------------
+# Backend: vectorized S-BENU (JIT delta-frontier engine over the six-block
+# device snapshot)
+# --------------------------------------------------------------------------
+
+
+class SBenuJaxBackend(ExecutorBackend):
+    """Lockstep delta-frontier enumeration (core/engine_sbenu_jax.py).
+
+    ``plan`` is the list of incremental plans (one per ΔP_i); ``source`` is
+    a *begun* SnapshotStore. Start batches cover the touched-vertex set of
+    the update batch (vertices with non-empty ΔΓ_out), never all of V(G);
+    every plan runs over each chunk, and a chunk whose total overflow is
+    non-zero is discarded whole and re-split by the shared driver.
+    """
+
+    name = "sbenu-jax"
+    splittable = True
+
+    def __init__(self, pattern: Optional[Pattern] = None,
+                 collect: str = "matches", lane: int = 8,
+                 d_min: int = 0, delta_d_min: int = 0,
+                 compaction: str = "cumsum"):
+        self._pattern = pattern          # unused; parity with SBenuBackend
+        self._collect_mode = collect
+        self._lane = lane
+        self._d_min = d_min
+        self._delta_d_min = delta_d_min
+        self._compaction = compaction
+        # runner cache outlives prepare(): a backend reused across time
+        # steps (run_timestep(backend=...)) compiles once per stream as
+        # long as the snapshot widths stay pinned (d_min / delta_d_min)
+        self._runners: Dict[Tuple[int, int, Tuple[int, ...]], Callable] = {}
+
+    def prepare(self, plans: Sequence[Plan], source,
+                config: ExecutorConfig) -> None:
+        import jax
+        from ..graph.dynamic import DeviceSnapshotStore
+        from .engine_sbenu_jax import plan_level_count
+        self.plans = list(plans)
+        # the runner cache keys on plan identity: a *different* plan list
+        # invalidates it (ids of collected plans could be recycled);
+        # self.plans keeps the current ones alive for the cache lifetime
+        plan_ids = tuple(id(p) for p in self.plans)
+        if getattr(self, "_cached_plan_ids", None) != plan_ids:
+            self._runners.clear()
+            self._cached_plan_ids = plan_ids
+        self.store = source
+        self.sentinel = source.n
+        self._starts = np.asarray(sorted(source.start_vertices()), np.int32)
+        # device-resident dual-snapshot store: prev blocks stay on device
+        # across steps; G'_t is derived lane-wise from prev + delta
+        dstore = DeviceSnapshotStore.for_store(
+            source, lane=self._lane, d_min=self._d_min,
+            delta_d_min=self._delta_d_min)
+        self.snap = dstore.step_snapshot()
+        # the Delta-ENU level has an exact bound: the worst chunk's total
+        # delta-edge count (each start emits exactly its delta row) — far
+        # tighter than batch * d_delta, keeping frontiers cache-resident
+        degs = np.array([len(source.delta_adj_out(int(v)))
+                         for v in self._starts], np.int64)
+        B = config.batch
+        denu_cap = int(max((degs[s0:s0 + B].sum()
+                            for s0 in range(0, len(degs), B)), default=B))
+        denu_cap = max(denu_cap, B, 8)
+        # round up to a power of two: steps with similar churn share one
+        # compiled shape instead of retracing every step
+        denu_cap = 1 << (denu_cap - 1).bit_length()
+        # average degree drives fan-out levels (single-adjacency ENUs)
+        avg_deg = max(1, round(source.prev.m / max(source.n, 1)))
+        # one caps tuple for the whole chunk: per-plan slices, concatenated
+        # (plans have different level counts; the driver grows all slices)
+        from .engine_sbenu_jax import sbenu_level_fanouts
+        self._offsets: List[Tuple[int, int]] = []
+        caps: List[int] = []
+        for plan in self.plans:
+            n_lv = plan_level_count(plan)
+            if config.caps is not None:
+                c = list(config.caps)[:n_lv]
+                c += [c[-1]] * (n_lv - len(c))
+            else:
+                # contraction levels keep the exact Delta-ENU bound; a
+                # fan-out level (candidates = one typed adjacency) scales
+                # by ~avg degree. The driver re-splits the heavy tail.
+                c, cur = [], denu_cap
+                for fans in sbenu_level_fanouts(plan):
+                    if fans:
+                        cur = min(cur * 2 * avg_deg, 1 << 22)
+                        cur = 1 << (cur - 1).bit_length()
+                    c.append(cur)
+            self._offsets.append((len(caps), len(caps) + len(c)))
+            caps.extend(c)
+        self._caps0 = tuple(caps)
+        self._collect = config.collect_matches or \
+            self._collect_mode == "matches"
+        self._intersect = config.intersect_impl
+        self._jit = jax.jit
+        self._plus: List[Tuple[int, ...]] = []
+        self._minus: List[Tuple[int, ...]] = []
+        self._count_plus = 0
+        self._count_minus = 0
+
+    def _n_starts(self) -> int:
+        return self._starts.shape[0]
+
+    def start_batches(self, config: ExecutorConfig):
+        n, B = self._starts.shape[0], config.batch
+        for s0 in range(0, n, B):
+            chunk = self._starts[s0:s0 + B]
+            ids = np.full(B, self.sentinel, np.int32)
+            ids[:chunk.shape[0]] = chunk
+            valid = np.zeros(B, bool)
+            valid[:chunk.shape[0]] = True
+            yield ids, valid
+
+    def initial_caps(self, config: ExecutorConfig) -> Tuple[int, ...]:
+        return self._caps0
+
+    def _runner(self, B: int, caps: Tuple[int, ...]) -> Callable:
+        key = (tuple(id(p) for p in self.plans), B, caps)
+        if key not in self._runners:
+            from .engine_sbenu_jax import build_sbenu_multi_enumerator
+            caps_list = [tuple(caps[lo:hi]) for lo, hi in self._offsets]
+            run = build_sbenu_multi_enumerator(
+                self.plans, self.sentinel, caps_list,
+                collect_matches=self._collect,
+                intersect_impl=self._intersect,
+                compaction=self._compaction)
+            self._runners[key] = self._jit(run)
+        return self._runners[key]
+
+    def run_chunk(self, ids, valid, universe_chunk, caps) -> ChunkResult:
+        import jax.numpy as jnp
+        jids, jvalid = jnp.asarray(ids), jnp.asarray(valid)
+        # all ΔP_i plans run in one fused dispatch per chunk
+        res = self._runner(ids.shape[0], tuple(caps))(self.snap, jids,
+                                                      jvalid)
+        ov = int(res.overflow)
+        if ov:
+            # discard the whole chunk; the driver re-splits or grows
+            return ChunkResult(count=0, overflow=ov)
+        cp, cm = int(res.count_plus), int(res.count_minus)
+        if self._collect and res.matches is not None:
+            mv = np.asarray(res.matches_valid)
+            rows = np.asarray(res.matches)[mv]
+            ops = np.asarray(res.match_ops)[mv]
+            for row, o in zip(rows, ops):
+                (self._plus if o > 0 else self._minus).append(
+                    tuple(int(x) for x in row))
+        self._count_plus += cp
+        self._count_minus += cm
+        return ChunkResult(count=cp + cm)
+
+    def finalize(self, stats: ExecStats) -> None:
+        from .sbenu import SBenuCounters
+        ctr = SBenuCounters(matches_plus=self._count_plus,
+                            matches_minus=self._count_minus)
+        stats.extras.update(delta_plus=set(self._plus),
+                            delta_minus=set(self._minus),
+                            counters=ctr)
+
+
+# --------------------------------------------------------------------------
 # Factory + dry-run hook
 # --------------------------------------------------------------------------
 
@@ -599,6 +766,7 @@ BACKENDS = {
     "jax": JaxBackend,
     "dist": DistBackend,
     "sbenu": SBenuBackend,
+    "sbenu-jax": SBenuJaxBackend,
 }
 
 

@@ -237,6 +237,8 @@ SQUARE = _p(4, [(0, 1), (1, 2), (2, 3), (0, 3)], "square")  # 4-cycle
 CHORDAL_SQUARE = _p(4, [(0, 1), (1, 2), (2, 3), (0, 3), (0, 2)], "chordal-square")
 CLIQUE4 = _p(4, list(itertools.combinations(range(4), 2)), "clique4")
 CLIQUE5 = _p(5, list(itertools.combinations(range(5), 2)), "clique5")
+PATH5 = _p(5, [(0, 1), (1, 2), (2, 3), (3, 4)], "path5")       # 5-path
+CYCLE5 = _p(5, [(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)], "cycle5")  # 5-cycle
 HOUSE = _p(5, [(0, 1), (1, 2), (2, 3), (3, 4), (0, 4), (0, 1), ][:5] + [], "house")
 # house = square + roof triangle
 HOUSE = _p(5, [(0, 1), (1, 2), (2, 3), (0, 3), (0, 4), (1, 4)], "house")
@@ -266,8 +268,8 @@ Q9 = _p(6, list(CHORDAL_SQUARE.edges) + [(0, 4), (2, 4), (0, 5), (2, 5)], "q9")
 UNDIRECTED_PATTERNS: Dict[str, Pattern] = {
     p.name: p
     for p in [
-        TRIANGLE, SQUARE, CHORDAL_SQUARE, CLIQUE4, CLIQUE5, HOUSE, FAN5,
-        Q1, Q2, Q3, Q4, Q5, Q6, Q7, Q8, Q9,
+        TRIANGLE, SQUARE, CHORDAL_SQUARE, CLIQUE4, CLIQUE5, PATH5, CYCLE5,
+        HOUSE, FAN5, Q1, Q2, Q3, Q4, Q5, Q6, Q7, Q8, Q9,
     ]
 }
 

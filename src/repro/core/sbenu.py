@@ -483,20 +483,39 @@ def run_timestep(pattern: Pattern, plans: Sequence[Plan],
                  store: SnapshotStore, batch: Sequence[Update],
                  theta: Optional[int] = None,
                  cache_capacity: Optional[int] = None,
-                 chunk: int = 64
+                 chunk: int = 64, engine: str = "ref",
+                 collect: str = "matches", backend=None, **backend_kwargs
                  ) -> Tuple[Set[Tuple[int, ...]], Set[Tuple[int, ...]],
                             SBenuCounters]:
     """One full Alg. 4 iteration: pre-process, enumerate, post-process.
 
     The enumeration sub-phase routes through the unified Executor API
-    (core/executor.py): start vertices of the update batch are chunked by
-    the shared driver, heavy tasks θ-split on their delta adjacency list.
+    (core/executor.py). ``engine`` picks the backend: ``"ref"`` (alias
+    ``"sbenu"``) interprets every task in Python; ``"sbenu-jax"`` runs the
+    vectorized delta-frontier engine over the six-block device snapshot.
+    Either way the shared driver chunks the touched-vertex start set and
+    splits overloaded chunks (θ delta-slicing for the interpreter, adaptive
+    re-chunking for the JIT engine).
+
+    Passing a prepared ``backend`` reuses it (the JIT backend then keeps
+    its compiled runners across the whole stream instead of recompiling
+    every step).
     """
-    from .executor import ExecutorConfig, SBenuBackend, drive
+    from .executor import (ExecutorConfig, SBenuBackend, SBenuJaxBackend,
+                           drive)
     store.begin_step(batch)
-    backend = SBenuBackend(pattern, cache_capacity=cache_capacity)
+    if backend is None:
+        if engine in ("ref", "sbenu"):
+            backend = SBenuBackend(pattern, cache_capacity=cache_capacity,
+                                   collect=collect, **backend_kwargs)
+        elif engine == "sbenu-jax":
+            backend = SBenuJaxBackend(pattern, collect=collect,
+                                      **backend_kwargs)
+        else:
+            raise ValueError(f"unknown S-BENU engine {engine!r}")
     st = drive(backend, list(plans), store,
-               ExecutorConfig(batch=chunk, theta=theta))
+               ExecutorConfig(batch=chunk, theta=theta,
+                              collect_matches=(collect == "matches")))
     store.end_step()
     return (st.extras["delta_plus"], st.extras["delta_minus"],
             st.extras["counters"])

@@ -10,15 +10,77 @@ current delta sets — using the paper's two-form value design:
 ``get_adj(v, type, direction, op)`` serves the six adjacency kinds of §5.3.1
 for either snapshot; ``op='+'`` selects ``G'_t``, ``op='-'`` selects
 ``G'_{t-1}``, and ``(type='delta', op='*')`` returns the flagged delta set.
+
+Six-adjacency device layout (the vectorized S-BENU substrate)
+-------------------------------------------------------------
+:meth:`SnapshotStore.device_snapshot` materializes the begun step as six
+typed/directed padded row blocks — ``{out, in} x {prev, current, delta}`` —
+each a sentinel-padded ``int32[N+1, D]`` matrix (row ``N`` is the all-holes
+sentinel row so gathers with invalid ids are safe):
+
+* ``prev_{out,in}``    rows of ``G'_{t-1}`` — serves ``(either, dir, '-')``;
+* ``cur_{out,in}``     rows of ``G'_t``     — serves ``(either, dir, '+')``;
+* ``delta_{out,in}``   the touched-vertex delta adjacency, value rows
+  paired with ``delta_*_sign`` rows carrying the paper's ± edge flags
+  (+1 insert, -1 delete, 0 hole).
+
+The two remaining §5.3.1 kinds are derived lane-wise on device:
+``unaltered = prev`` with entries flagged ``-`` masked out, and
+``(delta, dir, ±)`` = the sign-filtered delta value rows. ``prev``/``cur``
+blocks of one direction share a width so a per-row snapshot selector
+(Delta-ENU's ``op``) is a plain ``where`` between two gathers.
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
-from .storage import DiGraph
+import numpy as np
+
+from .storage import DiGraph, pad_rows
 
 Update = Tuple[str, int, int]  # (op, src, dst)
+
+
+@dataclass
+class DeviceSnapshot:
+    """The six padded adjacency blocks of one time step (numpy; the JAX
+    engine registers this class as a pytree and moves it to device).
+
+    All value blocks are sentinel-padded ``int32[N+1, D]`` with ascending
+    valid entries; sign blocks are ``int32[N+1, Dd]`` aligned with
+    ``delta_*`` (+1/-1, 0 at holes). ``n`` is the vertex count == sentinel.
+    """
+
+    prev_out: np.ndarray
+    prev_in: np.ndarray
+    cur_out: np.ndarray
+    cur_in: np.ndarray
+    delta_out: np.ndarray
+    delta_out_sign: np.ndarray
+    delta_in: np.ndarray
+    delta_in_sign: np.ndarray
+    n: int
+
+    @property
+    def d_out(self) -> int:
+        return self.prev_out.shape[1]
+
+    @property
+    def d_in(self) -> int:
+        return self.prev_in.shape[1]
+
+    @property
+    def widths(self) -> Tuple[int, ...]:
+        """Static shape signature — equal widths mean no recompilation."""
+        return (self.prev_out.shape[1], self.prev_in.shape[1],
+                self.delta_out.shape[1], self.delta_in.shape[1])
+
+
+def _with_sentinel_row(rows: np.ndarray, fill: int) -> np.ndarray:
+    return np.concatenate(
+        [rows, np.full((1, rows.shape[1]), fill, rows.dtype)], axis=0)
 
 
 class SnapshotStore:
@@ -29,6 +91,8 @@ class SnapshotStore:
         self.delta_in: Dict[int, Dict[int, str]] = {}
         self.t = 0
         self.total_queries = 0
+        # device-resident mirrors notified on end_step (DeviceSnapshotStore)
+        self._mirrors: List["DeviceSnapshotStore"] = []
 
     # ------------------------------------------------------------ time steps
     def begin_step(self, batch: Sequence[Update]) -> None:
@@ -56,6 +120,8 @@ class SnapshotStore:
                     self.prev.add_edge(a, b)
                 else:
                     self.prev.remove_edge(a, b)
+        for m in self._mirrors:
+            m.on_host_end_step()
         self.delta_out = {}
         self.delta_in = {}
 
@@ -90,6 +156,58 @@ class SnapshotStore:
             return frozenset(deleted)
         raise ValueError(type_)
 
+    # ------------------------------------------------------ device layout
+    def device_snapshot(self, lane: int = 8,
+                        d_min: int = 0, delta_d_min: int = 0
+                        ) -> DeviceSnapshot:
+        """Materialize the begun step as the six padded row blocks (host
+        build, from scratch — the simple reference path; the streaming
+        engine keeps a :class:`DeviceSnapshotStore` instead, which stays
+        resident on device and advances incrementally).
+
+        ``d_min``/``delta_d_min`` are width floors (rounded up to ``lane``):
+        pinning them across time steps keeps the block shapes static so the
+        JIT engine compiles once per stream instead of once per step.
+        """
+        n = self.n
+        sets_by_dir = {"out": self.prev.out, "in": self.prev.inn}
+        delta_by_dir = {"out": self.delta_out, "in": self.delta_in}
+        blocks: Dict[str, np.ndarray] = {}
+        for di in ("out", "in"):
+            prev_sets = sets_by_dir[di]
+            dd = delta_by_dir[di]
+            prev_adj = [np.array(sorted(s), dtype=np.int64)
+                        for s in prev_sets]
+            cur_adj = list(prev_adj)
+            for v, ops in dd.items():
+                cur = set(prev_sets[v])
+                for w, op in ops.items():
+                    (cur.add if op == "+" else cur.discard)(w)
+                cur_adj[v] = np.array(sorted(cur), dtype=np.int64)
+            # prev/cur share a width so the per-row op selector is a where()
+            d = max(max((len(a) for a in prev_adj), default=0),
+                    max((len(a) for a in cur_adj), default=0), d_min)
+            blocks[f"prev_{di}"] = _with_sentinel_row(
+                pad_rows(prev_adj, n, d_max=d, lane=lane), n)
+            blocks[f"cur_{di}"] = _with_sentinel_row(
+                pad_rows(cur_adj, n, d_max=d, lane=lane), n)
+            d_delta = max(max((len(ops) for ops in dd.values()), default=0),
+                          delta_d_min)
+            dvals = [np.zeros(0, dtype=np.int64)] * n
+            dsigns: List[np.ndarray] = [np.zeros(0, dtype=np.int64)] * n
+            for v, ops in dd.items():
+                ws = sorted(ops)
+                dvals[v] = np.array(ws, dtype=np.int64)
+                dsigns[v] = np.array([1 if ops[w] == "+" else -1
+                                      for w in ws], dtype=np.int64)
+            vals = _with_sentinel_row(
+                pad_rows(dvals, n, d_max=d_delta, lane=lane), n)
+            signs = pad_rows(dsigns, 0, d_max=d_delta, lane=lane)
+            # sign holes are 0 (pad_rows fills with its sentinel arg)
+            blocks[f"delta_{di}"] = vals
+            blocks[f"delta_{di}_sign"] = _with_sentinel_row(signs, 0)
+        return DeviceSnapshot(n=n, **blocks)
+
     # ----------------------------------------------------------- test helpers
     def snapshot(self, which: str) -> DiGraph:
         """Materialize G'_t ('cur') or G'_{t-1} ('prev') — test oracle only."""
@@ -103,3 +221,204 @@ class SnapshotStore:
                 else:
                     g.remove_edge(a, b)
         return g
+
+
+def stream_width_floors(g0: DiGraph, batches: Sequence[Sequence[Update]]
+                        ) -> Tuple[int, int]:
+    """``(d_min, delta_d_min)`` pinning snapshot widths over a whole known
+    update stream, so the JIT engine compiles once instead of retracing
+    whenever a step's max degree or delta degree drifts."""
+    cur = g0.copy()
+    d = max(max((len(s) for s in cur.out), default=0),
+            max((len(s) for s in cur.inn), default=0))
+    dd = 0
+    for batch in batches:
+        touched_out: Dict[int, int] = {}
+        touched_in: Dict[int, int] = {}
+        for op, a, b in batch:
+            touched_out[a] = touched_out.get(a, 0) + 1
+            touched_in[b] = touched_in.get(b, 0) + 1
+            if op == "+":
+                cur.add_edge(a, b)
+            else:
+                cur.remove_edge(a, b)
+        dd = max(dd, max(touched_out.values(), default=0),
+                 max(touched_in.values(), default=0))
+        d = max(d, max((len(s) for s in cur.out), default=0),
+                max((len(s) for s in cur.inn), default=0))
+    return d, dd
+
+
+class DeviceSnapshotStore:
+    """Device-resident dual-snapshot row store (the streaming fast path).
+
+    Keeps the ``prev`` blocks resident on device across time steps and
+    advances them incrementally, so per-step host work is O(|ΔE|) instead
+    of an O(N) Python rebuild:
+
+    * :meth:`step_snapshot` (store begun): scatter the update batch into
+      the delta value/sign buffers (vectorized COO build), then derive
+      ``G'_t`` **on device, touched rows only**: gather the |ΔV| touched
+      prev rows, mask deleted entries, merge the inserted delta values
+      (concat + row sort + slice back to width D — the merged row fits by
+      the width guard), and scatter them into a copy of the prev block.
+      Per-step device cost is O(|ΔV|·D) plus one O(N·D) memcpy, not a
+      full-graph masked sort.
+    * end_step (via the :class:`SnapshotStore` mirror hook): the merged
+      snapshot IS the cur block, so promotion is free buffer adoption
+      (``prev <- cur``). Width overflow drops the mirror; the next step
+      rebuilds with wider rows.
+
+    Rebuild triggers (all O(N), rare): first use, a touched row outgrowing
+    the pinned width, or the host store advancing without this mirror
+    (e.g. interpreter steps in between).
+    """
+
+    def __init__(self, store: SnapshotStore, lane: int = 8,
+                 d_min: int = 0, delta_d_min: int = 0):
+        import jax
+        import jax.numpy as jnp
+        self.host = store
+        self.n = store.n
+        self.params = (lane, d_min, delta_d_min)
+        self.lane, self.d_min, self.delta_d_min = lane, d_min, delta_d_min
+        self._jnp = jnp
+        self._prev: Optional[Dict[str, object]] = None   # di -> [N+1, D]
+        self._d: Dict[str, int] = {}
+        self._cur: Dict[str, object] = {}
+        self._pending_t: Optional[int] = None
+        self.rebuilds = 0
+
+        def derive(prev, tids, dvals, dsigns):
+            """cur block from prev + the touched rows' delta (tids are
+            sentinel-padded: padding rewrites the sentinel row with
+            itself). Merged rows stay sorted with tail holes, so the
+            engines' binary-search intersect b-side invariant holds."""
+            d = prev.shape[1]
+            rows = prev[tids]                       # [K, D]
+            dv = dvals[tids]                        # [K, Dd]
+            ds = dsigns[tids]
+            deleted = jnp.where(ds < 0, dv, self.n)
+            hit = jnp.any(rows[:, :, None] == deleted[:, None, :], axis=2)
+            unalt = jnp.where(hit, self.n, rows)
+            plus = jnp.where(ds > 0, dv, self.n)
+            merged = jnp.sort(jnp.concatenate([unalt, plus], axis=1),
+                              axis=1)[:, :d]        # fits: width guard
+            return prev.at[tids].set(merged)
+
+        self._derive = jax.jit(derive)
+        store._mirrors.append(self)
+
+    @classmethod
+    def for_store(cls, store: SnapshotStore, lane: int = 8,
+                  d_min: int = 0, delta_d_min: int = 0
+                  ) -> "DeviceSnapshotStore":
+        """Reuse an existing mirror with the same layout parameters."""
+        for m in store._mirrors:
+            if isinstance(m, cls) and m.params == (lane, d_min,
+                                                   delta_d_min):
+                return m
+        return cls(store, lane=lane, d_min=d_min, delta_d_min=delta_d_min)
+
+    def _round(self, x: int) -> int:
+        return ((max(x, 1) + self.lane - 1) // self.lane) * self.lane
+
+    def _rebuild_prev(self) -> None:
+        """Full host build of the resident prev blocks (stream start or
+        width overflow); accounts for this step's inserts so cur fits."""
+        self.rebuilds += 1
+        n, jnp = self.n, self._jnp
+        self._prev = {}
+        for di, sets, delta in (("out", self.host.prev.out,
+                                 self.host.delta_out),
+                                ("in", self.host.prev.inn,
+                                 self.host.delta_in)):
+            need = max((len(sets[v])
+                        + sum(1 for op in ops.values() if op == "+")
+                        for v, ops in delta.items()), default=0)
+            d = self._round(max(max((len(s) for s in sets), default=0),
+                                need, self.d_min))
+            rows = np.full((n + 1, d), n, np.int32)
+            for v, s in enumerate(sets):
+                a = sorted(s)
+                rows[v, :len(a)] = a
+            self._prev[di] = jnp.asarray(rows)
+            self._d[di] = d
+
+    def _delta_buffers(self, delta: Dict[int, Dict[int, str]]
+                       ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Vectorized COO scatter of one direction's delta dicts into
+        fresh value/sign buffers."""
+        n = self.n
+        items = [(v, w, 1 if op == "+" else -1)
+                 for v, ops in delta.items() for w, op in ops.items()]
+        if not items:
+            dd = self._round(self.delta_d_min)
+            return (np.full((n + 1, dd), n, np.int32),
+                    np.zeros((n + 1, dd), np.int32), 0)
+        arr = np.asarray(items, np.int64)
+        arr = arr[np.lexsort((arr[:, 1], arr[:, 0]))]
+        src = arr[:, 0]
+        gstart = np.flatnonzero(np.r_[True, src[1:] != src[:-1]])
+        counts = np.diff(np.r_[gstart, len(src)])
+        pos = np.arange(len(src)) - np.repeat(gstart, counts)
+        dd = self._round(max(int(counts.max()), self.delta_d_min))
+        vals = np.full((n + 1, dd), n, np.int32)
+        signs = np.zeros((n + 1, dd), np.int32)
+        vals[src, pos] = arr[:, 1]
+        signs[src, pos] = arr[:, 2]
+        return vals, signs, int(counts.max())
+
+    def step_snapshot(self) -> DeviceSnapshot:
+        """Six blocks for the host store's begun step, derived on device."""
+        st = self.host
+        if self._prev is not None:
+            # a touched row of G'_t outgrowing the pinned width forces a
+            # wider rebuild (deletes only shrink rows)
+            for di, sets, delta in (("out", st.prev.out, st.delta_out),
+                                    ("in", st.prev.inn, st.delta_in)):
+                if any(len(sets[v]) + sum(1 for op in ops.values()
+                                          if op == "+") > self._d[di]
+                       for v, ops in delta.items()):
+                    self._prev = None
+                    break
+        if self._prev is None:
+            self._rebuild_prev()
+        jnp = self._jnp
+        blocks: Dict[str, object] = {}
+        for di, delta in (("out", st.delta_out), ("in", st.delta_in)):
+            vals, signs, _ = self._delta_buffers(delta)
+            jvals, jsigns = jnp.asarray(vals), jnp.asarray(signs)
+            # touched ids, sentinel-padded to a power of two so steps with
+            # similar churn share one compiled derive shape
+            touched = sorted(delta)
+            k = 1 << max(len(touched) - 1, 0).bit_length()
+            tids = np.full(max(k, 1), self.n, np.int32)
+            tids[:len(touched)] = touched
+            cur = self._derive(self._prev[di], jnp.asarray(tids), jvals,
+                               jsigns)
+            self._cur[di] = cur
+            blocks[f"prev_{di}"] = self._prev[di]
+            blocks[f"cur_{di}"] = cur
+            blocks[f"delta_{di}"] = jvals
+            blocks[f"delta_{di}_sign"] = jsigns
+        self._pending_t = st.t
+        return DeviceSnapshot(n=self.n, **blocks)
+
+    def on_host_end_step(self) -> None:
+        """SnapshotStore mirror hook (post-merge): promote cur -> prev."""
+        st = self.host
+        if self._prev is None:
+            return
+        if self._pending_t != st.t:
+            self._prev = None            # store advanced without us
+            return
+        for di, sets, delta in (("out", st.prev.out, st.delta_out),
+                                ("in", st.prev.inn, st.delta_in)):
+            if any(len(sets[v]) > self._d[di] for v in delta):
+                self._prev = None        # merged row overflows: rebuild
+                return
+        for di in ("out", "in"):
+            self._prev[di] = self._cur[di]   # promotion is buffer adoption
+        self._cur = {}
+        self._pending_t = None

@@ -19,6 +19,7 @@ compares on both CPU and TPU.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -27,6 +28,37 @@ import numpy as np
 from ..core.estimate import GraphStats
 
 Edge = Tuple[int, int]
+
+
+def pad_rows(adj: Sequence[np.ndarray], sentinel: int,
+             d_max: Optional[int] = None, lane: int = 8,
+             on_overflow: str = "raise") -> np.ndarray:
+    """Pack per-vertex sorted arrays into a sentinel-padded ``int32[N, D]``.
+
+    ``D`` is ``max(d_max or max-len, 1)`` rounded up to a multiple of
+    ``lane``. When a row is longer than the final width ``D`` (so entries
+    would actually be dropped), ``on_overflow`` decides: ``"raise"``
+    (default) fails, ``"clamp"`` keeps the first ``D`` entries and emits a
+    ``RuntimeWarning`` — never a silent truncation.
+    """
+    max_len = max((len(a) for a in adj), default=0)
+    d = max_len if d_max is None else d_max
+    d = max(d, 1)
+    d = ((d + lane - 1) // lane) * lane
+    if max_len > d:
+        overfull = sum(1 for a in adj if len(a) > d)
+        msg = (f"padded rows truncated: {overfull} row(s) exceed the "
+               f"padded width {d} (longest has {max_len} entries)")
+        if on_overflow == "raise":
+            raise ValueError(msg + "; pass on_overflow='clamp' to truncate")
+        if on_overflow != "clamp":
+            raise ValueError(f"unknown on_overflow={on_overflow!r}")
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
+    rows = np.full((len(adj), d), sentinel, dtype=np.int32)
+    for v, a in enumerate(adj):
+        a = a[:d]
+        rows[v, :len(a)] = a
+    return rows
 
 
 class Graph:
@@ -87,19 +119,17 @@ class Graph:
 
     # ---------------------------------------------------------- dense layout
     def padded_adjacency(self, d_max: Optional[int] = None,
-                         lane: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+                         lane: int = 8, on_overflow: str = "raise"
+                         ) -> Tuple[np.ndarray, np.ndarray]:
         """``(rows int32[N, D], deg int32[N])`` padded with sentinel N.
 
         ``D`` is rounded up to a multiple of ``lane`` for friendly layouts
         (the Pallas kernel wants a multiple of 128; callers pass lane=128).
+        A ``d_max`` below the real maximum degree raises by default;
+        ``on_overflow='clamp'`` truncates with a RuntimeWarning instead.
         """
-        d = int(self.deg.max()) if d_max is None else d_max
-        d = max(d, 1)
-        d = ((d + lane - 1) // lane) * lane
-        rows = np.full((self.n, d), self.n, dtype=np.int32)
-        for v in range(self.n):
-            a = self.adj[v][:d]
-            rows[v, :len(a)] = a
+        rows = pad_rows(self.adj, self.n, d_max=d_max, lane=lane,
+                        on_overflow=on_overflow)
         return rows, self.deg.astype(np.int32)
 
 
@@ -148,6 +178,16 @@ class DiGraph:
 
     def stats(self) -> GraphStats:
         return GraphStats(n_vertices=self.n, n_edges=self.m)
+
+    # ---------------------------------------------------------- dense layout
+    def padded_adjacency(self, direction: str = "out",
+                         d_max: Optional[int] = None, lane: int = 8,
+                         on_overflow: str = "raise") -> np.ndarray:
+        """Sentinel-padded ``int32[N, D]`` rows of one adjacency direction."""
+        sets = self.out if direction == "out" else self.inn
+        adj = [np.array(sorted(s), dtype=np.int64) for s in sets]
+        return pad_rows(adj, self.n, d_max=d_max, lane=lane,
+                        on_overflow=on_overflow)
 
 
 def edge_index_from_graph(g: Graph) -> np.ndarray:

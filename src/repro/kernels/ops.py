@@ -44,7 +44,9 @@ def intersect_padded(a: jax.Array, b: jax.Array, sentinel: int,
                      impl: str = "auto") -> jax.Array:
     """Row-wise padded-set intersection; see kernels/ref.py for semantics.
 
-    a, b: int32[B, D]. ``impl``: auto | pallas | ref | chunked | interpret.
+    a, b: int32[B, D]. ``impl``: auto | pallas | ref | chunked | binary |
+    interpret. ``binary`` needs ``b`` rows fully ascending (holes only in
+    the tail) — see kernels/ref.py.
     """
     if impl == "auto":
         impl = "pallas" if _on_tpu() else ("chunked" if a.shape[-1] > 512
@@ -53,6 +55,8 @@ def intersect_padded(a: jax.Array, b: jax.Array, sentinel: int,
         return ref.sorted_intersect(a, b, sentinel)
     if impl == "chunked":
         return ref.sorted_intersect_chunked(a, b, sentinel)
+    if impl == "binary":
+        return ref.sorted_intersect_binary(a, b, sentinel)
     interpret = impl == "interpret"
     B, D = a.shape
     bm = 8 if B % 8 == 0 else 1

@@ -8,6 +8,15 @@ Generates a synthetic graph, compiles the best execution plan (Alg. 3 with
 all optimizations), and runs the chosen engine through the unified
 Executor API (core/executor.py) over every device, reporting counts + the
 paper's cost metrics (DBQ rows crossed / computation per shard / skew).
+
+Continuous enumeration (S-BENU, Alg. 4) runs the timestep loop instead:
+
+    PYTHONPATH=src python -m repro.launch.enumerate \
+        --engine sbenu-jax --pattern "q1'" --n 5000 --edges 25000 \
+        --steps 3 --update-batch 500
+
+``--engine sbenu`` interprets every task; ``--engine sbenu-jax`` runs the
+vectorized delta-frontier engine over the six-block device snapshot.
 """
 
 from __future__ import annotations
@@ -17,6 +26,53 @@ import os
 import time
 
 
+def _run_continuous(args) -> None:
+    """Algorithm 4's timestep loop over the chosen S-BENU backend."""
+    from ..core.estimate import GraphStats
+    from ..core.pattern import get_pattern
+    from ..core.sbenu import generate_best_sbenu_plans, run_timestep
+    from ..graph.dynamic import SnapshotStore, stream_width_floors
+    from ..graph.generate import edge_stream
+
+    P = get_pattern(args.pattern)
+    if not P.directed:
+        raise SystemExit(f"--engine {args.engine} needs a directed pattern "
+                         f"(q1'..q5', dtoy); got {args.pattern!r}")
+    g0, batches = edge_stream(n=args.n, m_init=args.edges, steps=args.steps,
+                              batch=args.update_batch, seed=args.seed)
+    store = SnapshotStore(g0)
+    stats = GraphStats(args.n, args.edges, delta_edges=args.update_batch)
+    plans = generate_best_sbenu_plans(P, stats)
+    print(f"pattern {args.pattern}: {len(plans)} incremental plans "
+          f"(one per delta edge)")
+    backend = None
+    if args.engine == "sbenu-jax":
+        # one backend for the whole stream, widths pinned over every step:
+        # the JIT engine compiles once instead of retracing per step
+        from ..core.executor import SBenuJaxBackend
+        d, dd = stream_width_floors(g0, batches)
+        backend = SBenuJaxBackend(collect="counts", d_min=d,
+                                  delta_d_min=dd)
+    total_p = total_m = 0
+    t_all = 0.0
+    for step, batch in enumerate(batches, 1):
+        t0 = time.time()
+        dp, dm, ctr = run_timestep(P, plans, store, batch,
+                                   engine=args.engine, backend=backend,
+                                   chunk=args.batch_per_shard,
+                                   collect="counts")
+        dt = time.time() - t0
+        t_all += dt
+        total_p += ctr.matches_plus
+        total_m += ctr.matches_minus
+        print(f"step {step}: dR+ {ctr.matches_plus:>8}  "
+              f"dR- {ctr.matches_minus:>8}  {dt:6.2f}s  "
+              f"{args.update_batch / max(dt, 1e-9):,.0f} updates/s")
+    print(f"\nengine             : {args.engine}")
+    print(f"total dR+ / dR-    : {total_p} / {total_m}")
+    print(f"wall time          : {t_all:.2f}s over {args.steps} steps")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pattern", default="chordal-square")
@@ -24,7 +80,8 @@ def main():
     ap.add_argument("--edges", type=int, default=8000)
     ap.add_argument("--graph", choices=["er", "powerlaw"],
                     default="powerlaw")
-    ap.add_argument("--engine", choices=["dist", "jax", "ref"],
+    ap.add_argument("--engine",
+                    choices=["dist", "jax", "ref", "sbenu", "sbenu-jax"],
                     default="dist")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (set before jax init)")
@@ -32,12 +89,20 @@ def main():
     ap.add_argument("--hot", type=int, default=64)
     ap.add_argument("--rebalance", action="store_true")
     ap.add_argument("--vcbc", action="store_true")
+    ap.add_argument("--steps", type=int, default=3,
+                    help="time steps (continuous engines)")
+    ap.add_argument("--update-batch", type=int, default=200,
+                    help="edge updates per time step (continuous engines)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
+
+    if args.engine in ("sbenu", "sbenu-jax"):
+        _run_continuous(args)
+        return
 
     import jax
 

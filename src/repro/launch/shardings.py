@@ -228,6 +228,11 @@ def batch_specs(family: str, kind: str, specs: Dict[str, Any],
         return out
     if family == "benu":
         shard = flat
+        if kind == "sbenu_enum":
+            # snapshot blocks replicated, start batch sharded over the mesh
+            return {k: (P(shard) if v.ndim == 1
+                        else P(*([None] * v.ndim)))
+                    for k, v in specs.items()}
         return {"shards": P(shard, None, None),
                 "hot_rows": P(None, None),
                 "starts": P(shard), "starts_valid": P(shard)}

@@ -344,6 +344,56 @@ def _benu_cell(spec: ArchSpec, shape: str, mesh: Mesh,
 
 
 # --------------------------------------------------------------------------
+# S-BENU cell (streaming/continuous enumeration, one Delta-P_i step)
+# --------------------------------------------------------------------------
+
+
+def _sbenu_cell(spec: ArchSpec, shape: str, mesh: Mesh,
+                multi_pod: bool) -> CellProgram:
+    from ..core.engine_sbenu_jax import (build_sbenu_enumerator,
+                                         sbenu_default_caps)
+    from ..core.estimate import GraphStats
+    from ..core.pattern import get_pattern
+    from ..core.sbenu import generate_best_sbenu_plans
+    from ..graph.dynamic import DeviceSnapshot
+    cfg = spec.model_cfg
+    sp = spec.shapes[shape]
+    d = sp.dims
+    n, B = d["n_vertices"], d["batch"]
+    stats = GraphStats(n_vertices=n, n_edges=n * 8,
+                       delta_edges=d["delta_width"])
+    plans = generate_best_sbenu_plans(get_pattern(cfg.sbenu_pattern), stats)
+    plan = plans[0]                      # lower ΔP_1's delta-frontier step
+    caps = sbenu_default_caps(plan, B, d["delta_width"], d["row_width"])
+    run = build_sbenu_enumerator(plan, n, caps)
+    ispecs = spec.input_specs(shape)
+    bspec = batch_specs("benu", sp.kind, ispecs, multi_pod)
+    bsh = {k: NamedSharding(mesh, v) for k, v in bspec.items()}
+    keys = ("prev_out", "prev_in", "cur_out", "cur_in", "delta_out",
+            "delta_out_sign", "delta_in", "delta_in_sign")
+
+    def fn(prev_out, prev_in, cur_out, cur_in, delta_out, delta_out_sign,
+           delta_in, delta_in_sign, starts, starts_valid):
+        snap = DeviceSnapshot(
+            prev_out=prev_out, prev_in=prev_in, cur_out=cur_out,
+            cur_in=cur_in, delta_out=delta_out,
+            delta_out_sign=delta_out_sign, delta_in=delta_in,
+            delta_in_sign=delta_in_sign, n=n)
+        return run(snap, starts, starts_valid)
+
+    return CellProgram(
+        name=f"sbenu:{shape}", fn=fn,
+        args=tuple(ispecs[k] for k in keys) + (ispecs["starts"],
+                                               ispecs["starts_valid"]),
+        in_shardings=tuple(bsh[k] for k in keys) + (bsh["starts"],
+                                                    bsh["starts_valid"]),
+        out_shardings=None,
+        meta={"family": "benu", "kind": sp.kind, "n_params": 0,
+              "n_active_params": 0, "dims": dict(d),
+              "plan": plan.pretty(), "caps": caps})
+
+
+# --------------------------------------------------------------------------
 
 
 def build_cell(arch: str, shape: str, mesh: Mesh,
@@ -358,5 +408,7 @@ def build_cell(arch: str, shape: str, mesh: Mesh,
     if spec.family == "recsys":
         return _rec_cell(spec, shape, mesh, multi_pod)
     if spec.family == "benu":
+        if spec.shapes[shape].kind == "sbenu_enum":
+            return _sbenu_cell(spec, shape, mesh, multi_pod)
         return _benu_cell(spec, shape, mesh, multi_pod)
     raise KeyError(spec.family)

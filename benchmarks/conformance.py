@@ -19,14 +19,20 @@ PATTERNS = ("triangle", "square", "clique4", "house")
 def run() -> Table:
     g = powerlaw(150, 4, seed=7)
     t = Table("Cross-engine conformance (unified Executor API)",
-              ["pattern", "ref", "jax", "jax splits", "agree"])
+              ["pattern", "ref", "jax", "oocache", "ooc hit %", "agree"])
     for pname in PATTERNS:
         p = get_pattern(pname)
         plan = generate_best_plan(p, g.stats())
         ref = make_executor("ref").run(plan, g, batch=64)
         jx = make_executor("jax").run(plan, g, batch=64)
-        t.add(pname, ref.count, jx.count, jx.chunks_split,
-              "yes" if ref.count == jx.count else "NO")
+        # whole device footprint (slab + staging + hot + sentinel)
+        # bounded below 25% of the graph's rows, like the tests
+        ooc = make_executor("oocache", cache_rows=int(g.n * 0.12),
+                            hot=int(g.n * 0.04)).run(plan, g, batch=64)
+        agree = ref.count == jx.count == ooc.count
+        t.add(pname, ref.count, jx.count, ooc.count,
+              f"{ooc.extras['cache']['hit_rate'] * 100:.1f}",
+              "yes" if agree else "NO")
     return t
 
 

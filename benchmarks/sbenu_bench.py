@@ -142,7 +142,20 @@ def main() -> None:
                          "comparison")
     ap.add_argument("--smoke", action="store_true",
                     help="small stream + conformance assert (CI gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the result table as a JSON artifact")
     args = ap.parse_args()
+
+    def emit(table):
+        if args.json:
+            import json
+            payload = dict(benchmark="sbenu", title=table.title,
+                           columns=table.columns,
+                           rows=[[str(x) for x in r] for r in table.rows])
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"wrote {args.json} ({len(table.rows)} rows)")
+
     if args.smoke:
         t = Table("sbenu_bench --smoke: interpreter vs sbenu-jax",
                   ["pattern", "step", "dR+", "dR-", "interp s", "jit s",
@@ -152,6 +165,7 @@ def main() -> None:
                          update_batch=100, seed=args.seed, chunk=64,
                          table=t)
         t.show()
+        emit(t)
         run_scratch().show()             # asserts vs the snapshot diff
         print("smoke OK: interpreter == sbenu-jax on every step, "
               "incremental == recompute-from-scratch diff")
@@ -167,6 +181,7 @@ def main() -> None:
                       seed=args.seed, chunk=args.chunk,
                       run_ref=not args.no_ref, table=t)
     t.show()
+    emit(t)
     if not args.no_ref:
         print(f"\nsteady-state speedup (steps >= 2): {sp:.1f}x")
 

@@ -1,0 +1,207 @@
+"""Out-of-core executor: the vectorized engine behind a row cache (§6).
+
+``engine_jax`` compiles a whole BENU plan into one jitted program that
+gathers adjacency rows from a device-resident ``[N+1, D]`` matrix — which
+caps the data graph at HBM. This module re-expresses the same plan as a
+**pull** program, the paper's §6 implementation model vectorized:
+
+* the padded adjacency lives in host-RAM shards
+  (:class:`~repro.graph.hoststore.HostRowStore`); device memory holds only
+  a bounded row cache (:class:`~repro.distributed.rowcache.DeviceRowCache`:
+  pinned hot-by-degree rows + an LRU slab);
+* the plan is split into **segments at DBQ boundaries**. Everything
+  between two DBQs (INT / TRC / ENU / RES) compiles into one jitted
+  function; at each boundary the frontier's id column syncs to host, the
+  cache dedups it and gathers only the *cold* rows from the host shards —
+  the per-level miss gather. Communication (PCIe here, network in the
+  paper) therefore scales with distinct cold rows per level, never with
+  partial matches;
+* results are bit-identical to ``engine_jax``: the segments run the same
+  primitives (`_expand`, `_apply_filters`, `_vcbc_row_counts`) on the
+  same schedule, and the cache serves exact rows at any capacity.
+
+The per-level host sync is the price of the pull model; the executor
+backend (``core/executor.py``, ``oocache``) hides most of it by
+prefetching the next chunk's predicted rows while the current chunk
+computes (double-buffered ``device_put``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..distributed.rowcache import DeviceRowCache
+from ..kernels import ops as kops
+from .instructions import (DBQ, ENU, INI, INT, RES, TRC, Instr, Plan, Var)
+from .engine_jax import (_apply_filters, _count_dtype, _expand, _liveness,
+                         _vcbc_row_counts, check_jit_supported)
+
+#: one plan segment: (dbq heading the segment or None, [(instr, plan index)],
+#: dbq level tag, index of the segment's first ENU within the plan's ENUs)
+Segment = Tuple[Optional[Instr], List[Tuple[Instr, int]], int, int]
+
+
+def split_segments(plan: Plan) -> List[Segment]:
+    """Cut ``plan.instrs`` at every DBQ (each cut = one host round-trip)."""
+    segs: List[Segment] = []
+    head: Optional[Instr] = None
+    body: List[Tuple[Instr, int]] = []
+    level = -1
+    n_levels = 0
+    enu_base = 0
+    enu_seen = 0
+    for ip, ins in enumerate(plan.instrs):
+        if ins.op == DBQ:
+            segs.append((head, body, level, enu_base))
+            head, body = ins, []
+            level = n_levels
+            n_levels += 1
+            enu_base = enu_seen
+        else:
+            body.append((ins, ip))
+            enu_seen += ins.op == ENU
+    segs.append((head, body, level, enu_base))
+    return segs
+
+
+class OocEngine:
+    """Execute one BENU plan with all row fetches pulled through ``cache``.
+
+    Shapes follow ``engine_jax``: frontiers are ``[B]`` (or ``[cap]``)
+    columns of int32 vertex ids (``sentinel = N`` marks holes), adjacency
+    sets are ``[B, D]`` padded rows. ``caps[i]`` bounds the i-th ENU's
+    child frontier; overflow > 0 invalidates the chunk (the driver
+    re-splits it).
+    """
+
+    def __init__(self, plan: Plan, cache: DeviceRowCache,
+                 collect_matches: bool = False,
+                 intersect_impl: str = "auto",
+                 compaction: str = "cumsum"):
+        import jax
+        self.plan = plan
+        self.cache = cache
+        self.sentinel = cache.n
+        self.has_universe = check_jit_supported(plan)
+        if collect_matches and plan.vcbc:
+            raise ValueError("cannot collect raw matches from a VCBC plan")
+        self._collect = collect_matches
+        self._intersect = intersect_impl
+        self._compaction = compaction
+        self._live = _liveness(plan)
+        self.segments = split_segments(plan)
+        self.n_levels = sum(1 for ins in plan.instrs if ins.op == DBQ)
+        self._jit = jax.jit
+        # (segment index, B, caps) -> compiled segment
+        self._fns: Dict[Tuple[int, int, Tuple[int, ...]], object] = {}
+
+    # ------------------------------------------------------------ segments
+    def _seg_fn(self, k: int, B: int, caps: Tuple[int, ...]):
+        key = (k, B, caps)
+        if key not in self._fns:
+            self._fns[key] = self._jit(self._build_seg(k, caps))
+        return self._fns[key]
+
+    def _build_seg(self, k: int, caps: Tuple[int, ...]):
+        import jax.numpy as jnp
+        _, body, _, enu_base = self.segments[k]
+        plan, live, sentinel = self.plan, self._live, self.sentinel
+        collect = self._collect
+        compaction = self._compaction
+        isect = functools.partial(kops.intersect_padded, sentinel=sentinel,
+                                  impl=self._intersect)
+
+        def seg(env: Dict[Var, object], valid, count, overflow, starts,
+                universe_chunk):
+            cdt = _count_dtype()
+            matches = matches_valid = None
+            enu_i = enu_base
+            for ins, ip in body:
+                if ins.op == INI:
+                    env[ins.target] = jnp.where(valid, starts, sentinel)
+                elif ins.op in (INT, TRC):
+                    if ins.op == TRC:
+                        sets = [env[ins.operands[2]], env[ins.operands[3]]]
+                    else:
+                        sets = []
+                        for v in ins.operands:
+                            if v[0] == "VG":
+                                B = valid.shape[0]
+                                sets.append(jnp.broadcast_to(
+                                    universe_chunk[None, :],
+                                    (B, universe_chunk.shape[0])))
+                            else:
+                                sets.append(env[v])
+                    res = sets[0]
+                    for other in sets[1:]:
+                        res = isect(res, other)
+                    if ins.filters:
+                        res = _apply_filters(res, ins.filters, env, sentinel)
+                    env[ins.target] = res
+                elif ins.op == ENU:
+                    cand = env[ins.operands[0]]
+                    env, valid, ov = _expand(env, valid, cand, ins.target,
+                                             caps[enu_i], live[ip + 1],
+                                             sentinel, compaction=compaction)
+                    overflow = overflow + ov.astype(cdt)
+                    enu_i += 1
+                elif ins.op == RES:
+                    if plan.vcbc:
+                        count = count + jnp.sum(_vcbc_row_counts(
+                            plan, env, valid, sentinel,
+                            ins.report)).astype(cdt)
+                    else:
+                        count = count + jnp.sum(valid).astype(cdt)
+                        if collect:
+                            matches = jnp.stack([env[v] for v in ins.report],
+                                                axis=1)
+                            matches_valid = valid
+            return env, valid, count, overflow, matches, matches_valid
+
+        return seg
+
+    # ----------------------------------------------------------- execution
+    def run_chunk(self, starts: np.ndarray, starts_valid: np.ndarray,
+                  universe_chunk: Optional[np.ndarray],
+                  caps: Sequence[int]):
+        """One fixed-shape chunk; returns ``(count, overflow, matches,
+        matches_valid)`` as host ints / numpy arrays.
+
+        Each segment boundary costs one device->host sync (the frontier's
+        id column) and at most one host->device block (the level's cold
+        rows). A chunk whose running overflow turns non-zero aborts early:
+        its result would be discarded by the driver anyway, and skipping
+        the remaining levels keeps garbage rows out of the cache stats.
+        """
+        import jax.numpy as jnp
+        caps = tuple(int(c) for c in caps)
+        starts_j = jnp.asarray(np.asarray(starts, np.int32))
+        valid = jnp.asarray(np.asarray(starts_valid, bool))
+        uni = (jnp.asarray(universe_chunk) if universe_chunk is not None
+               else None)
+        if self.has_universe and uni is None:
+            raise ValueError("plan consumes V(G): pass universe_chunk")
+        cdt = _count_dtype()
+        count = jnp.zeros((), cdt)
+        overflow = jnp.zeros((), cdt)
+        env: Dict[Var, object] = {}
+        matches = matches_valid = None
+        B = starts_j.shape[0]
+        for k, (dbq, _, level, _) in enumerate(self.segments):
+            if dbq is not None:
+                ids_np = np.asarray(env[dbq.operands[0]])
+                env[dbq.target] = self.cache.lookup(ids_np, level=level)
+            env, valid, count, overflow, m, mv = self._seg_fn(k, B, caps)(
+                env, valid, count, overflow, starts_j, uni)
+            if m is not None:
+                matches, matches_valid = m, mv
+            if k + 1 < len(self.segments) and int(overflow) > 0:
+                return 0, int(overflow), None, None
+        out_matches = None
+        if self._collect and int(overflow) == 0 and matches is not None:
+            mnp = np.asarray(matches)
+            out_matches = mnp[np.asarray(matches_valid)]
+        return int(count), int(overflow), out_matches, matches_valid

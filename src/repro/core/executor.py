@@ -21,14 +21,30 @@ specifics only) and the **same** driver owns
 
 Backends::
 
-    ref     pure-Python oracle interpreter        (core/ref_engine.py)
-    jax     single-device vectorized frontier     (core/engine_jax.py)
-    dist    shard_map SPMD over a device mesh     (core/engine_dist.py)
-    sbenu   continuous/delta enumeration          (core/sbenu.py)
+    ref        pure-Python oracle interpreter        (core/ref_engine.py)
+    jax        single-device vectorized frontier     (core/engine_jax.py)
+    dist       shard_map SPMD over a device mesh     (core/engine_dist.py)
+    oocache    out-of-core: host-RAM row shards +
+               bounded device cache + async prefetch (core/engine_ooc.py)
+    sbenu      continuous/delta enumeration          (core/sbenu.py)
+    sbenu-jax  vectorized continuous enumeration     (core/engine_sbenu_jax.py)
 
 Use :func:`make_executor` (or instantiate a backend directly) and call
 :meth:`Executor.run`; all engines route through here, so every launcher,
 benchmark, and conformance test shares one chunk-size / overflow policy.
+
+Example (the reference interpreter; every other engine is a drop-in
+``make_executor`` name swap)::
+
+    >>> from repro.core.executor import make_executor
+    >>> from repro.core.pattern import get_pattern
+    >>> from repro.core.plangen import generate_best_plan
+    >>> from repro.graph.generate import erdos_renyi
+    >>> g = erdos_renyi(30, 60, seed=1)                # 30 vertices
+    >>> plan = generate_best_plan(get_pattern("triangle"), g.stats())
+    >>> stats = make_executor("ref").run(plan, g, batch=8)
+    >>> stats.count == make_executor("ref").run(plan, g, batch=32).count
+    True
 """
 
 from __future__ import annotations
@@ -110,6 +126,8 @@ def split_id_batch(ids: np.ndarray, valid: np.ndarray, granularity: int,
 
 
 def plan_enu_count(plan: Plan) -> int:
+    """Number of ENU instructions == number of per-level capacities a
+    static-engine caps tuple must carry."""
     return sum(1 for ins in plan.instrs if ins.op == ENU)
 
 
@@ -120,7 +138,13 @@ def plan_enu_count(plan: Plan) -> int:
 
 @dataclass
 class ExecutorConfig:
-    """Driver-level policy shared by every backend."""
+    """Driver-level policy shared by every backend.
+
+    Units: ``batch`` and ``universe_chunk`` count start vertices /
+    universe ids per chunk; ``caps[i]`` counts child-frontier rows at the
+    i-th ENU level; ``theta`` counts C2 candidates (the interpreter's
+    task-split threshold, paper §6.3).
+    """
 
     batch: int = 256                 # global start-vertex chunk size
     caps: Optional[Sequence[int]] = None   # per-ENU frontier capacities
@@ -137,10 +161,10 @@ class ChunkResult:
     """One chunk execution. ``overflow``/``drops`` > 0 invalidates the
     result: the driver discards it and re-chunks or escalates."""
 
-    count: int
-    overflow: int = 0
-    drops: int = 0
-    matches: Optional[np.ndarray] = None          # [k, n] valid rows only
+    count: int                       # matches found in the chunk
+    overflow: int = 0                # children dropped at some ENU level
+    drops: int = 0                   # fetch requests beyond req_cap (dist)
+    matches: Optional[np.ndarray] = None   # int32[k, plan.n], valid rows only
     extras: Dict[str, Any] = field(default_factory=dict)
 
 
@@ -157,6 +181,7 @@ class ExecStats:
     extras: Dict[str, Any] = field(default_factory=dict)
 
     def merge_extras(self, other: Dict[str, Any]) -> None:
+        """Accumulate a chunk's extras (values must support ``+``)."""
         for k, v in other.items():
             if k in self.extras:
                 self.extras[k] = self.extras[k] + v
@@ -189,16 +214,21 @@ class ExecutorBackend(ABC):
 
     def start_batches(self, config: ExecutorConfig
                       ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Yield ``(ids int32[batch], valid bool[batch])`` start chunks."""
         yield from start_id_batches(self._n_starts(), config.batch)
 
     def universe_chunks(self, config: ExecutorConfig
                         ) -> Sequence[Optional[np.ndarray]]:
+        """Sentinel-padded V(G) slices (``int32[W]``) for detached-vertex
+        plans; ``[None]`` when the plan never consumes V(G)."""
         return [None]
 
     def initial_caps(self, config: ExecutorConfig) -> Tuple[int, ...]:
+        """Per-ENU child-frontier capacities (rows) for the first attempt."""
         return ()
 
     def grow_caps(self, caps: Tuple[int, ...]) -> Tuple[int, ...]:
+        """Escalated capacities once a chunk is unsplittable (default 2x)."""
         return tuple(int(c * 2) for c in caps)
 
     def escalate_requests(self) -> None:
@@ -284,6 +314,8 @@ class Executor:
 
     def run(self, plan: Any, source: Any,
             config: Optional[ExecutorConfig] = None, **kwargs) -> ExecStats:
+        """Enumerate ``plan`` over ``source`` exactly; ``kwargs`` are
+        :class:`ExecutorConfig` fields (``batch=``, ``caps=``, ...)."""
         cfg = config if config is not None else ExecutorConfig(**kwargs)
         return drive(self.backend, plan, source, cfg)
 
@@ -539,6 +571,116 @@ class DistBackend(ExecutorBackend):
 
 
 # --------------------------------------------------------------------------
+# Backend: out-of-core fetch path (host-RAM shards + device row cache)
+# --------------------------------------------------------------------------
+
+
+class OocBackend(ExecutorBackend):
+    """Out-of-core vectorized enumeration (core/engine_ooc.py, paper §6).
+
+    The padded adjacency lives in host-RAM shards
+    (:class:`~repro.graph.hoststore.HostRowStore`); device memory holds a
+    bounded row cache (:class:`~repro.distributed.rowcache.DeviceRowCache`:
+    ``cache_rows`` LRU slots + the top-``hot``-by-degree rows pinned).
+    Every DBQ level dedups its id batch and pulls only the cold rows from
+    the host — communication scales with distinct cold rows, never partial
+    matches — and the next chunk's start rows are prefetched
+    (double-buffered async ``device_put``) while the current chunk
+    computes.
+
+    Sizing: ``cache_rows``/``hot``/``stage_rows`` count rows (``D * 4``
+    bytes each); when omitted, ``cache_rows``/``hot`` default to
+    ``cache_frac`` / ``hot_frac`` of the graph's N rows and
+    ``stage_rows`` to ``cache_rows // 4`` per staging buffer. Worst-case
+    device residency is ``cache_rows + 2 * stage_rows + hot + 1`` rows
+    total (slab + both prefetch buffers + pinned hot + sentinel),
+    independent of graph size.
+    """
+
+    name = "oocache"
+    splittable = True
+
+    def __init__(self, cache_rows: Optional[int] = None,
+                 cache_frac: float = 0.15,
+                 hot: Optional[int] = None, hot_frac: float = 0.05,
+                 prefetch: bool = True, stage_rows: Optional[int] = None,
+                 rows_per_shard: int = 4096,
+                 compaction: str = "cumsum"):
+        self._cache_rows = cache_rows
+        self._cache_frac = cache_frac
+        self._hot = hot
+        self._hot_frac = hot_frac
+        self._prefetch = prefetch
+        self._stage_rows = stage_rows
+        self._rows_per_shard = rows_per_shard
+        self._compaction = compaction
+        self.cache = None
+        self.store = None
+
+    def prepare(self, plan: Plan, source: Graph,
+                config: ExecutorConfig) -> None:
+        from ..distributed.rowcache import DeviceRowCache
+        from ..graph.hoststore import HostRowStore
+        from .engine_jax import check_jit_supported, default_caps
+        from .engine_ooc import OocEngine
+        self.plan, self.graph = plan, source
+        n = source.n
+        self.sentinel = n
+        self.store = HostRowStore.from_graph(
+            source, rows_per_shard=self._rows_per_shard)
+        cap = self._cache_rows if self._cache_rows is not None else \
+            max(1, int(n * self._cache_frac))
+        hot = self._hot if self._hot is not None else \
+            max(0, int(n * self._hot_frac))
+        self.cache = DeviceRowCache(self.store, cap, hot=hot,
+                                    stage_rows=self._stage_rows)
+        self.has_universe = check_jit_supported(plan)
+        self._caps0 = tuple(config.caps) if config.caps is not None else \
+            tuple(default_caps(plan, config.batch, self.store.d))
+        self.engine = OocEngine(plan, self.cache,
+                                collect_matches=config.collect_matches,
+                                intersect_impl=config.intersect_impl,
+                                compaction=self._compaction)
+
+    def _n_starts(self) -> int:
+        return self.graph.n
+
+    def start_batches(self, config: ExecutorConfig):
+        """Yield start batches, prefetching batch ``k + 1``'s rows right
+        before handing batch ``k`` to the driver: the async H2D copy
+        overlaps batch ``k``'s segment compute (double buffering)."""
+        batches = list(start_id_batches(self.graph.n, config.batch))
+        for k, (ids, valid) in enumerate(batches):
+            if self._prefetch and k + 1 < len(batches):
+                nxt_ids, nxt_valid = batches[k + 1]
+                self.cache.prefetch(nxt_ids[nxt_valid])
+            yield ids, valid
+
+    def universe_chunks(self, config: ExecutorConfig):
+        if not self.has_universe:
+            return [None]
+        return build_universe_chunks(self.graph.n, config.universe_chunk)
+
+    def initial_caps(self, config: ExecutorConfig) -> Tuple[int, ...]:
+        return self._caps0
+
+    def run_chunk(self, ids, valid, universe_chunk, caps) -> ChunkResult:
+        count, overflow, matches, _ = self.engine.run_chunk(
+            ids, valid, universe_chunk, caps)
+        return ChunkResult(count=count, overflow=overflow, matches=matches)
+
+    def finalize(self, stats: ExecStats) -> None:
+        stats.extras.update(
+            cache=self.cache.stats.as_dict(),
+            cache_capacity_rows=self.cache.capacity_rows,
+            cache_hot_rows=self.cache.hot,
+            device_resident_rows=self.cache.device_rows,
+            device_resident_bytes=self.cache.device_bytes,
+            host_store_bytes=self.store.nbytes,
+            host_store_shards=len(self.store.shards))
+
+
+# --------------------------------------------------------------------------
 # Backend: S-BENU continuous enumeration (delta tasks on a SnapshotStore)
 # --------------------------------------------------------------------------
 
@@ -616,13 +758,18 @@ class SBenuJaxBackend(ExecutorBackend):
     def __init__(self, pattern: Optional[Pattern] = None,
                  collect: str = "matches", lane: int = 8,
                  d_min: int = 0, delta_d_min: int = 0,
-                 compaction: str = "cumsum"):
+                 compaction: str = "cumsum",
+                 snapshot_storage: str = "device"):
         self._pattern = pattern          # unused; parity with SBenuBackend
         self._collect_mode = collect
         self._lane = lane
         self._d_min = d_min
         self._delta_d_min = delta_d_min
         self._compaction = compaction
+        # 'device' keeps prev blocks resident in HBM across steps;
+        # 'host' keeps them in HostRowStore shards (host RAM), advanced
+        # in place — zero persistent device residency between steps
+        self._snapshot_storage = snapshot_storage
         # runner cache outlives prepare(): a backend reused across time
         # steps (run_timestep(backend=...)) compiles once per stream as
         # long as the snapshot widths stay pinned (d_min / delta_d_min)
@@ -648,7 +795,8 @@ class SBenuJaxBackend(ExecutorBackend):
         # across steps; G'_t is derived lane-wise from prev + delta
         dstore = DeviceSnapshotStore.for_store(
             source, lane=self._lane, d_min=self._d_min,
-            delta_d_min=self._delta_d_min)
+            delta_d_min=self._delta_d_min,
+            storage=self._snapshot_storage)
         self.snap = dstore.step_snapshot()
         # the Delta-ENU level has an exact bound: the worst chunk's total
         # delta-edge count (each start emits exactly its delta row) — far
@@ -765,6 +913,7 @@ BACKENDS = {
     "ref": RefBackend,
     "jax": JaxBackend,
     "dist": DistBackend,
+    "oocache": OocBackend,
     "sbenu": SBenuBackend,
     "sbenu-jax": SBenuJaxBackend,
 }

@@ -1,0 +1,363 @@
+"""DeviceRowCache: bounded device cache over a host row store (paper §6).
+
+The paper's workers pull adjacency rows on demand from a distributed KV
+store; a local LRU cache absorbs repeated fetches so communication scales
+with *distinct cold rows*, not partial matches. This module is that cache
+for the vectorized engines, with host RAM playing the remote store and
+HBM playing the local cache:
+
+* a **pinned hot set**: the top-``hot`` ids by degree live on device
+  permanently. Vertices are relabeled ascending by degree at load time
+  (``graph/storage.py``), so the hot set is exactly ids ``>= n - hot`` —
+  the same convention as ``DistributedRowStore``'s hot-row replication.
+  Hub rows are both the most re-fetched and the skew hazard; pinning them
+  removes that traffic class entirely;
+* an **LRU slab** of ``capacity_rows`` rows (``int32[C, D]`` on device)
+  with a host-side ``id -> slot`` map. Per lookup the id batch is deduped
+  (each distinct row crosses PCIe at most once per level — the vectorized
+  analogue of the paper's per-task cache), misses are gathered from the
+  :class:`~repro.graph.hoststore.HostRowStore` as one dense block and
+  scattered into LRU slots;
+* **double-buffered async prefetch**: :meth:`prefetch` stages the next
+  chunk's predicted rows via ``jax.device_put`` (an async H2D copy) while
+  the current chunk's compute is in flight; the staged block is adopted
+  into the slab at the next lookup with a device-to-device scatter. At
+  most two staged blocks exist at a time (the two buffers).
+
+Correctness never depends on capacity: a lookup's miss block is consumed
+directly (three gathers + two selects), so even ``capacity_rows=0``
+serves exact rows — it just re-fetches every level.
+
+Counters follow Fig. 10's axes: queries (rows requested), cold rows
+(host->device fetches), bytes moved (demand + prefetch), per DBQ level.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..graph.hoststore import HostRowStore
+
+
+@dataclass
+class CacheStats:
+    """Fetch-path accounting. Units: rows are padded adjacency rows
+    (``d * 4`` bytes each); levels are DBQ indices within the plan."""
+
+    queries: int = 0          # non-sentinel rows requested (pre-dedup)
+    unique_queries: int = 0   # distinct rows requested per lookup, summed
+    cold_rows: int = 0        # rows fetched host->device on demand
+    prefetch_rows: int = 0    # rows staged ahead by prefetch()
+    prefetch_used: int = 0    # staged rows later served from the slab
+    hot_hits: int = 0         # rows served from the pinned hot block
+    evictions: int = 0
+    bytes_demand: int = 0     # demand H2D traffic (cold_rows * row bytes)
+    bytes_prefetch: int = 0   # prefetch H2D traffic
+    lookups: int = 0
+    per_level: Dict[int, List[int]] = field(default_factory=dict)
+    # per_level[lvl] = [queries, cold_rows, bytes]
+
+    @property
+    def bytes_moved(self) -> int:
+        """Total H2D bytes (demand + prefetch)."""
+        return self.bytes_demand + self.bytes_prefetch
+
+    @property
+    def hit_rate(self) -> float:
+        """1 - cold/queries: fraction of requested rows served without a
+        host fetch (hot pins, slab hits, within-batch dedup, prefetch)."""
+        if self.queries == 0:
+            return 0.0
+        return 1.0 - self.cold_rows / self.queries
+
+    def level_note(self, lvl: int, queries: int, cold: int,
+                   nbytes: int) -> None:
+        acc = self.per_level.setdefault(lvl, [0, 0, 0])
+        acc[0] += queries
+        acc[1] += cold
+        acc[2] += nbytes
+
+    def as_dict(self) -> Dict[str, object]:
+        return dict(queries=self.queries, unique_queries=self.unique_queries,
+                    cold_rows=self.cold_rows,
+                    prefetch_rows=self.prefetch_rows,
+                    prefetch_used=self.prefetch_used,
+                    hot_hits=self.hot_hits, evictions=self.evictions,
+                    bytes_moved=self.bytes_moved,
+                    bytes_demand=self.bytes_demand,
+                    bytes_prefetch=self.bytes_prefetch,
+                    hit_rate=self.hit_rate, lookups=self.lookups,
+                    per_level={k: list(v)
+                               for k, v in sorted(self.per_level.items())})
+
+
+class DeviceRowCache:
+    """Bounded device residency over a :class:`HostRowStore`.
+
+    Device memory held (worst case, all static):
+    ``(capacity_rows + 2 * stage_rows + hot + 1) * d * 4`` bytes — the
+    LRU slab, the two prefetch staging buffers, the pinned hot block and
+    the sentinel row — independent of graph size.
+    ``stage_rows`` bounds one staging buffer (default
+    ``capacity_rows // 4``, so staging adds at most half a slab).
+    """
+
+    def __init__(self, store: HostRowStore, capacity_rows: int,
+                 hot: int = 0, stage_rows: Optional[int] = None):
+        import jax
+        import jax.numpy as jnp
+        self._jax, self._jnp = jax, jnp
+        self.store = store
+        self.n = store.n
+        self.d = store.d
+        self.capacity_rows = max(int(capacity_rows), 0)
+        self.stage_rows = (self.capacity_rows // 4 if stage_rows is None
+                           else max(int(stage_rows), 0))
+        self.hot = min(max(int(hot), 0), store.n)
+        self.hot_lo = store.n - self.hot   # ids >= hot_lo are pinned
+        # pinned block rows are ids [hot_lo, n] — the top-degree set plus
+        # the sentinel row, served without touching the slab
+        self.hot_rows = jnp.asarray(
+            store.gather(np.arange(self.hot_lo, store.n + 1)))
+        self.slab = jnp.full((max(self.capacity_rows, 1), self.d),
+                             store.n, jnp.int32)
+        self._slot_of: "OrderedDict[int, int]" = OrderedDict()  # LRU order
+        self._free: List[int] = list(range(self.capacity_rows))
+        # staging buffers: (ids, device block, id -> block row) — rows
+        # not yet consumed by a lookup
+        self._staged: List[Tuple[np.ndarray, object, Dict[int, int]]] = []
+        self._staged_ids: set = set()
+        self._from_prefetch: set = set()   # slab ids that arrived staged
+        self.stats = CacheStats()
+
+    # ----------------------------------------------------------- residency
+    @property
+    def device_rows(self) -> int:
+        """Worst-case rows held on device (slab + both staging buffers +
+        pinned hot + sentinel)."""
+        return self.capacity_rows + 2 * self.stage_rows + self.hot + 1
+
+    @property
+    def device_bytes(self) -> int:
+        return self.device_rows * self.d * 4
+
+    # ------------------------------------------------------------ prefetch
+    def prefetch(self, ids: np.ndarray) -> None:
+        """Stage rows for a *future* lookup: async ``device_put`` of the
+        predicted rows that are not already resident. Call right before
+        dispatching the current chunk's compute — the H2D copy overlaps
+        it. Staged rows are served straight from their staging buffer
+        (and promoted into the slab) the first time a lookup requests
+        them — they never compete for slab slots before being read, so a
+        small slab churned by deep levels cannot evict a prefetch before
+        it pays off. At most two buffers are in flight (double buffering
+        — a third folds the oldest into the slab).
+        """
+        if self.capacity_rows == 0 or self.stage_rows == 0:
+            return
+        ids = np.unique(np.clip(np.asarray(ids, np.int64).reshape(-1),
+                                0, self.n))
+        want = np.array([v for v in ids
+                         if v < self.hot_lo and int(v) not in self._slot_of
+                         and int(v) not in self._staged_ids], np.int64)
+        if want.size == 0:
+            return
+        # one staging buffer's budget — staged blocks are live device
+        # memory and are counted in device_rows
+        want = want[:self.stage_rows]
+        block_np = self.store.gather(want)
+        block = self._jax.device_put(block_np)     # async H2D
+        self._staged.append(
+            (want, block, {int(v): i for i, v in enumerate(want)}))
+        self._staged_ids.update(int(v) for v in want)
+        self.stats.prefetch_rows += int(want.size)
+        self.stats.bytes_prefetch += int(block_np.nbytes)
+        if len(self._staged) > 2:                  # keep two buffers live
+            self._adopt_one()
+
+    def _adopt_one(self) -> None:
+        """Fold the oldest staging buffer's unread rows into the slab."""
+        ids, block, pos = self._staged.pop(0)
+        live = np.array([v for v in ids if int(v) in pos], np.int64)
+        keep_ids, keep_pos = self._alloc_slots(live)
+        if keep_ids.size:
+            slots = np.array([self._slot_of[int(v)] for v in keep_ids],
+                             np.int32)
+            src = np.array([pos[int(v)] for v in keep_ids], np.int64)
+            self.slab = self.slab.at[self._jnp.asarray(slots)].set(
+                block[self._jnp.asarray(src)])
+            self._from_prefetch.update(int(v) for v in keep_ids)
+        # release only the rows still claimed by THIS buffer: a consumed
+        # id may have been evicted and re-staged in a newer buffer
+        self._staged_ids.difference_update(int(v) for v in live)
+
+    # ---------------------------------------------------------- coherence
+    def invalidate(self, ids: np.ndarray) -> None:
+        """Drop every cached copy of ``ids`` — slab entries, staged rows,
+        and pinned hot rows (the hot rows are re-gathered from the
+        store). Call after the backing store's rows change **in place**
+        (e.g. a host-mode snapshot store's ``end_step`` patches touched
+        rows); without it, lookups would keep serving the pre-update
+        rows.
+        """
+        jnp = self._jnp
+        ids = np.unique(np.clip(np.asarray(ids, np.int64).reshape(-1),
+                                0, self.n))
+        hot_ids = []
+        for v in ids:
+            v = int(v)
+            if v >= self.hot_lo:
+                if v < self.n:
+                    hot_ids.append(v)
+                continue
+            slot = self._slot_of.pop(v, None)
+            if slot is not None:
+                self._free.append(slot)
+            self._from_prefetch.discard(v)
+            if v in self._staged_ids:
+                for _, _, pos in self._staged:
+                    pos.pop(v, None)
+                self._staged_ids.discard(v)
+        self._staged = [t for t in self._staged if t[2]]
+        if hot_ids:
+            idx = np.asarray(hot_ids, np.int64) - self.hot_lo
+            self.hot_rows = self.hot_rows.at[jnp.asarray(idx)].set(
+                jnp.asarray(self.store.gather(np.asarray(hot_ids))))
+
+    # -------------------------------------------------------------- lookup
+    def _alloc_slots(self, ids: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Assign LRU slots to as many of ``ids`` as fit; returns the kept
+        ids and their positions within ``ids``."""
+        if self.capacity_rows == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        ids = np.asarray(ids, np.int64)
+        if ids.size > self.capacity_rows:
+            # only the tail fits; earlier rows would be evicted unread
+            ids_kept = ids[-self.capacity_rows:]
+            pos_kept = np.arange(ids.size - self.capacity_rows, ids.size)
+        else:
+            ids_kept, pos_kept = ids, np.arange(ids.size)
+        out_ids, out_pos = [], []
+        for v, p in zip(ids_kept, pos_kept):
+            v = int(v)
+            if v in self._slot_of:         # already resident (race with
+                self._slot_of.move_to_end(v)   # a staged duplicate)
+                continue
+            if self._free:
+                slot = self._free.pop()
+            else:
+                evicted, slot = self._slot_of.popitem(last=False)  # LRU
+                self._from_prefetch.discard(evicted)
+                self.stats.evictions += 1
+            self._slot_of[v] = slot
+            out_ids.append(v)
+            out_pos.append(int(p))
+        return np.asarray(out_ids, np.int64), np.asarray(out_pos, np.int64)
+
+    def lookup(self, ids: np.ndarray, level: int = 0):
+        """Serve ``rows int32[B, d]`` (a jax array) for host ids ``ids``.
+
+        ``level`` tags the plan's DBQ index for per-level accounting.
+        Ids are clipped to ``[0, n]`` (ids ``>= n`` return the sentinel
+        row, negatives clamp to row 0). Sources, in
+        priority order: pinned hot block, LRU slab, staging buffers
+        (prefetched rows — promoted into the slab on first use), then a
+        demand host fetch of the remaining cold rows. The result is exact
+        regardless of capacity; capacity only changes how many rows had
+        to cross from the host.
+        """
+        jnp = self._jnp
+        ids = np.clip(np.asarray(ids, np.int64).reshape(-1), 0, self.n)
+        is_hot = ids >= self.hot_lo                 # includes sentinel
+        nv = int(np.sum(ids < self.n))
+        # -- unique-row resolution: classify each distinct id once
+        uniq, inv = np.unique(ids, return_inverse=True)
+        U = uniq.shape[0]
+        hot_sel, slab_sel, miss_sel = [], [], []
+        hot_src, slab_src = [], []
+        stg_sel = [[] for _ in self._staged]
+        stg_src = [[] for _ in self._staged]
+        stg_hit_ids = []
+        for u, v in enumerate(uniq):
+            v = int(v)
+            if v >= self.hot_lo:
+                hot_sel.append(u)
+                hot_src.append(v - self.hot_lo)
+                continue
+            slot = self._slot_of.get(v)
+            if slot is not None:
+                self._slot_of.move_to_end(v)        # LRU touch
+                if v in self._from_prefetch:        # adopted unread, first
+                    self.stats.prefetch_used += 1   # touch happens now
+                    self._from_prefetch.discard(v)
+                slab_sel.append(u)
+                slab_src.append(slot)
+                continue
+            for bi in range(len(self._staged) - 1, -1, -1):
+                pos = self._staged[bi][2].get(v)
+                if pos is not None:
+                    stg_sel[bi].append(u)
+                    stg_src[bi].append(pos)
+                    stg_hit_ids.append((bi, v))
+                    break
+            else:
+                miss_sel.append(u)
+        miss_u = uniq[miss_sel]
+        # -- demand fetch: one dense host gather, one H2D block
+        fresh = None
+        if miss_u.size:
+            fresh_np = self.store.gather(miss_u)
+            fresh = jnp.asarray(fresh_np)
+            self.stats.bytes_demand += int(fresh_np.nbytes)
+        # -- assemble the unique rows on device, then un-dedup
+        rows_u = jnp.full((U, self.d), self.n, jnp.int32)
+        if hot_sel:
+            rows_u = rows_u.at[jnp.asarray(np.asarray(hot_sel))].set(
+                self.hot_rows[jnp.asarray(np.asarray(hot_src))])
+        if slab_sel:
+            rows_u = rows_u.at[jnp.asarray(np.asarray(slab_sel))].set(
+                self.slab[jnp.asarray(np.asarray(slab_src))])
+        for bi, (sids, block, pos) in enumerate(self._staged):
+            if stg_sel[bi]:
+                rows_u = rows_u.at[jnp.asarray(np.asarray(stg_sel[bi]))].set(
+                    block[jnp.asarray(np.asarray(stg_src[bi]))])
+        if fresh is not None:
+            rows_u = rows_u.at[jnp.asarray(np.asarray(miss_sel))].set(fresh)
+        out = rows_u[jnp.asarray(inv)]
+        # -- promote: served staged rows + the miss block enter the slab
+        promote_ids, promote_rows = [], []
+        for bi, v in stg_hit_ids:
+            sids, block, pos = self._staged[bi]
+            promote_ids.append(v)
+            promote_rows.append(block[pos.pop(v)])  # consumed: unmap it
+            self._staged_ids.discard(v)
+        self.stats.prefetch_used += len(stg_hit_ids)
+        self._staged = [t for t in self._staged if t[2]]  # drop drained
+        if promote_ids or miss_u.size:
+            all_ids = np.concatenate(
+                [np.asarray(promote_ids, np.int64), miss_u])
+            keep_ids, keep_pos = self._alloc_slots(all_ids)
+            if keep_ids.size:
+                slots = np.array([self._slot_of[int(v)] for v in keep_ids],
+                                 np.int32)
+                source = jnp.stack(promote_rows) if promote_rows else None
+                if miss_u.size:
+                    source = (fresh if source is None
+                              else jnp.concatenate([source, fresh], axis=0))
+                self.slab = self.slab.at[jnp.asarray(slots)].set(
+                    source[jnp.asarray(keep_pos)])
+        # -- accounting
+        st = self.stats
+        st.lookups += 1
+        st.queries += nv
+        st.unique_queries += int(np.sum(uniq < self.n))
+        st.cold_rows += int(miss_u.size)
+        st.hot_hits += int(np.sum(is_hot & (ids < self.n)))
+        st.level_note(level, nv, int(miss_u.size),
+                      int(miss_u.size) * self.d * 4)
+        return out

@@ -29,6 +29,30 @@ The two remaining §5.3.1 kinds are derived lane-wise on device:
 ``(delta, dir, ±)`` = the sign-filtered delta value rows. ``prev``/``cur``
 blocks of one direction share a width so a per-row snapshot selector
 (Delta-ENU's ``op``) is a plain ``where`` between two gathers.
+
+:class:`DeviceSnapshotStore` keeps the resident blocks either on device
+(``storage='device'``, the streaming fast path) or in host-RAM shards
+(``storage='host'``, backed by :class:`~repro.graph.hoststore.HostRowStore`
+— zero persistent HBM between steps, with bounded-device row serving via
+:meth:`DeviceSnapshotStore.row_source` + the ``distributed/rowcache``
+device cache for snapshots whose resident blocks would not fit HBM).
+
+Example (two time steps; ``get_adj`` serves both snapshots)::
+
+    >>> from repro.graph.storage import DiGraph
+    >>> from repro.graph.dynamic import SnapshotStore
+    >>> g0 = DiGraph.from_edges(4, [(0, 1), (1, 2)])
+    >>> st = SnapshotStore(g0)
+    >>> st.begin_step([("+", 2, 3), ("-", 0, 1)])
+    >>> st.start_vertices()                  # vertices with non-empty dG_out
+    [0, 2]
+    >>> sorted(st.get_adj(2, "either", "out", "+"))   # G'_t
+    [3]
+    >>> sorted(st.get_adj(0, "either", "out", "-"))   # G'_{t-1}
+    [1]
+    >>> st.end_step()
+    >>> sorted(st.prev.out[0])               # the merged snapshot
+    []
 """
 
 from __future__ import annotations
@@ -84,6 +108,15 @@ def _with_sentinel_row(rows: np.ndarray, fill: int) -> np.ndarray:
 
 
 class SnapshotStore:
+    """The paper's two-form vertex values for one dynamic graph (§5, §6.2).
+
+    Holds ``prev`` (= G'_{t-1}, a :class:`DiGraph`) plus the begun step's
+    delta adjacency dicts ``delta_out/delta_in`` (vertex -> {neighbor:
+    '+'|'-'}). One ``begin_step(batch) ... end_step()`` bracket is one
+    time step of Algorithm 4; between the two calls every §5.3.1
+    adjacency kind of either snapshot is served by :meth:`get_adj`.
+    """
+
     def __init__(self, g0: DiGraph):
         self.n = g0.n
         self.prev = g0.copy()           # G'_{t-1}
@@ -131,6 +164,7 @@ class SnapshotStore:
         return sorted(self.delta_out.keys())
 
     def delta_adj_out(self, v: int) -> List[Tuple[str, int]]:
+        """ΔΓ_out(v) as ``[('+'|'-', neighbor)]`` sorted by neighbor id."""
         dd = self.delta_out.get(v, {})
         return sorted(((op, w) for w, op in dd.items()), key=lambda x: x[1])
 
@@ -272,20 +306,41 @@ class DeviceSnapshotStore:
     Rebuild triggers (all O(N), rare): first use, a touched row outgrowing
     the pinned width, or the host store advancing without this mirror
     (e.g. interpreter steps in between).
+
+    ``storage`` selects where the resident ``prev`` blocks live:
+
+    * ``'device'`` (default): jax arrays on device — fastest per step, but
+      the dual snapshot must fit HBM;
+    * ``'host'``: :class:`~repro.graph.hoststore.HostRowStore` shards in
+      host RAM, advanced **in place** by patching only the touched rows at
+      ``end_step`` (O(|ΔV|·D) host work — no O(N) rebuild, no persistent
+      device residency). :meth:`step_snapshot` still materializes full
+      numpy blocks for the resident jit engine (compat path, transferred
+      per step and freed after); :meth:`row_source` serves per-row
+      ``prev``/``cur`` views for the bounded-device cache fetch path
+      (``distributed/rowcache.py``) so row serving never needs the full
+      block on device.
     """
 
     def __init__(self, store: SnapshotStore, lane: int = 8,
-                 d_min: int = 0, delta_d_min: int = 0):
+                 d_min: int = 0, delta_d_min: int = 0,
+                 storage: str = "device"):
         import jax
         import jax.numpy as jnp
+        if storage not in ("device", "host"):
+            raise ValueError(f"storage must be device|host, got {storage!r}")
         self.host = store
         self.n = store.n
-        self.params = (lane, d_min, delta_d_min)
+        self.storage = storage
+        self.params = (lane, d_min, delta_d_min, storage)
         self.lane, self.d_min, self.delta_d_min = lane, d_min, delta_d_min
         self._jnp = jnp
-        self._prev: Optional[Dict[str, object]] = None   # di -> [N+1, D]
+        # di -> jax [N+1, D] (device mode) | HostRowStore (host mode)
+        self._prev: Optional[Dict[str, object]] = None
         self._d: Dict[str, int] = {}
         self._cur: Dict[str, object] = {}
+        # host mode: di -> (touched ids int64[K], merged rows int32[K, D])
+        self._cur_host: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
         self._pending_t: Optional[int] = None
         self.rebuilds = 0
 
@@ -311,21 +366,25 @@ class DeviceSnapshotStore:
 
     @classmethod
     def for_store(cls, store: SnapshotStore, lane: int = 8,
-                  d_min: int = 0, delta_d_min: int = 0
-                  ) -> "DeviceSnapshotStore":
+                  d_min: int = 0, delta_d_min: int = 0,
+                  storage: str = "device") -> "DeviceSnapshotStore":
         """Reuse an existing mirror with the same layout parameters."""
         for m in store._mirrors:
             if isinstance(m, cls) and m.params == (lane, d_min,
-                                                   delta_d_min):
+                                                   delta_d_min, storage):
                 return m
-        return cls(store, lane=lane, d_min=d_min, delta_d_min=delta_d_min)
+        return cls(store, lane=lane, d_min=d_min, delta_d_min=delta_d_min,
+                   storage=storage)
 
     def _round(self, x: int) -> int:
         return ((max(x, 1) + self.lane - 1) // self.lane) * self.lane
 
     def _rebuild_prev(self) -> None:
         """Full host build of the resident prev blocks (stream start or
-        width overflow); accounts for this step's inserts so cur fits."""
+        width overflow); accounts for this step's inserts so cur fits.
+        Device mode materializes jax ``[N+1, D]`` blocks; host mode builds
+        :class:`HostRowStore` shards (one shard transient at a time)."""
+        from .hoststore import HostRowStore
         self.rebuilds += 1
         n, jnp = self.n, self._jnp
         self._prev = {}
@@ -338,11 +397,15 @@ class DeviceSnapshotStore:
                         for v, ops in delta.items()), default=0)
             d = self._round(max(max((len(s) for s in sets), default=0),
                                 need, self.d_min))
-            rows = np.full((n + 1, d), n, np.int32)
-            for v, s in enumerate(sets):
-                a = sorted(s)
-                rows[v, :len(a)] = a
-            self._prev[di] = jnp.asarray(rows)
+            if self.storage == "host":
+                self._prev[di] = HostRowStore.from_adj(
+                    lambda v: sorted(sets[v]), n, d)
+            else:
+                rows = np.full((n + 1, d), n, np.int32)
+                for v, s in enumerate(sets):
+                    a = sorted(s)
+                    rows[v, :len(a)] = a
+                self._prev[di] = jnp.asarray(rows)
             self._d[di] = d
 
     def _delta_buffers(self, delta: Dict[int, Dict[int, str]]
@@ -369,12 +432,33 @@ class DeviceSnapshotStore:
         signs[src, pos] = arr[:, 2]
         return vals, signs, int(counts.max())
 
-    def step_snapshot(self) -> DeviceSnapshot:
-        """Six blocks for the host store's begun step, derived on device."""
+    def _derive_host(self, store, delta: Dict[int, Dict[int, str]]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side merge of the touched rows: ``(tids int64[K],
+        merged int32[K, D])`` — G'_t rows for exactly the touched
+        vertices, O(|ΔV|·D) work (the numpy twin of the device
+        ``derive``)."""
+        n = self.n
+        touched = np.asarray(sorted(delta), np.int64)
+        if touched.size == 0:
+            return touched, np.zeros((0, store.d), np.int32)
+        rows = store.gather(touched)
+        for i, v in enumerate(touched):
+            ops = delta[int(v)]
+            cur = {int(x) for x in rows[i] if x != n}
+            for w, op in ops.items():
+                (cur.add if op == "+" else cur.discard)(w)
+            a = sorted(cur)
+            rows[i] = n
+            rows[i, :len(a)] = a       # fits: step_snapshot width guard
+        return touched, rows
+
+    def _ensure_prev_fits(self) -> None:
+        """Width guard shared by every per-step entry point: a touched row
+        of G'_t outgrowing the pinned width forces a wider rebuild
+        (deletes only shrink rows)."""
         st = self.host
         if self._prev is not None:
-            # a touched row of G'_t outgrowing the pinned width forces a
-            # wider rebuild (deletes only shrink rows)
             for di, sets, delta in (("out", st.prev.out, st.delta_out),
                                     ("in", st.prev.inn, st.delta_in)):
                 if any(len(sets[v]) + sum(1 for op in ops.values()
@@ -384,6 +468,45 @@ class DeviceSnapshotStore:
                     break
         if self._prev is None:
             self._rebuild_prev()
+
+    def _ensure_step_cur_host(self) -> None:
+        """Host mode: derive (and cache) both directions' merged touched
+        rows for the begun step, once per step — row_source() and
+        step_snapshot() share this state, and setting ``_pending_t``
+        makes ``end_step`` patch the shards in place instead of
+        discarding them."""
+        st = self.host
+        self._ensure_prev_fits()
+        if self._pending_t == st.t and len(self._cur_host) == 2:
+            return
+        self._cur_host = {
+            di: self._derive_host(self._prev[di], delta)
+            for di, delta in (("out", st.delta_out), ("in", st.delta_in))}
+        self._pending_t = st.t
+
+    def step_snapshot(self) -> DeviceSnapshot:
+        """Six blocks for the host store's begun step, derived on device."""
+        st = self.host
+        if self.storage == "host":
+            # host mode: merge touched rows on host (O(|ΔV|·D)), assemble
+            # numpy blocks for the resident engine (compat path — the
+            # bounded-device path serves rows via row_source() instead)
+            self._ensure_step_cur_host()
+            blocks_h: Dict[str, np.ndarray] = {}
+            for di, delta in (("out", st.delta_out), ("in", st.delta_in)):
+                vals, signs, _ = self._delta_buffers(delta)
+                hs = self._prev[di]
+                tids, merged = self._cur_host[di]
+                prev_full = hs.to_rows()
+                cur_full = prev_full.copy()
+                if tids.size:
+                    cur_full[tids] = merged
+                blocks_h[f"prev_{di}"] = prev_full
+                blocks_h[f"cur_{di}"] = cur_full
+                blocks_h[f"delta_{di}"] = vals
+                blocks_h[f"delta_{di}_sign"] = signs
+            return DeviceSnapshot(n=self.n, **blocks_h)
+        self._ensure_prev_fits()
         jnp = self._jnp
         blocks: Dict[str, object] = {}
         for di, delta in (("out", st.delta_out), ("in", st.delta_in)):
@@ -406,7 +529,10 @@ class DeviceSnapshotStore:
         return DeviceSnapshot(n=self.n, **blocks)
 
     def on_host_end_step(self) -> None:
-        """SnapshotStore mirror hook (post-merge): promote cur -> prev."""
+        """SnapshotStore mirror hook (post-merge): promote cur -> prev.
+
+        Device mode adopts the derived cur buffers; host mode patches the
+        touched rows back into the host shards in place (O(|ΔV|·D))."""
         st = self.host
         if self._prev is None:
             return
@@ -418,7 +544,97 @@ class DeviceSnapshotStore:
             if any(len(sets[v]) > self._d[di] for v in delta):
                 self._prev = None        # merged row overflows: rebuild
                 return
+        if self.storage == "host":
+            for di in ("out", "in"):
+                tids, merged = self._cur_host.get(
+                    di, (np.zeros(0, np.int64), None))
+                if tids.size:
+                    self._prev[di].set_rows(tids, merged)
+            self._cur_host = {}
+            self._pending_t = None
+            return
         for di in ("out", "in"):
             self._prev[di] = self._cur[di]   # promotion is buffer adoption
         self._cur = {}
         self._pending_t = None
+
+    # ------------------------------------------------- bounded row serving
+    def row_source(self, direction: str, which: str = "cur"
+                   ) -> "SnapshotRowView":
+        """A :class:`HostRowStore`-shaped view over one resident block.
+
+        Host mode only (device mode already has the block resident).
+        ``which='prev'`` serves G'_{t-1} rows straight from the shards;
+        ``which='cur'`` overlays the begun step's merged touched rows.
+        Feed the view to ``distributed.rowcache.DeviceRowCache`` to serve
+        snapshot rows with bounded device residency — the fetch path for
+        streams whose resident blocks would not fit HBM.
+
+        Coherence across steps: ``end_step`` patches the backing shards
+        **in place**, so a ``DeviceRowCache`` kept alive across steps
+        must be told — call ``cache.invalidate(touched_ids)`` after
+        ``end_step`` (only ``'prev'`` views are meaningful to keep; a
+        ``'cur'`` view's overlay is per-step by construction, so request
+        a fresh one via this method each step). A *rebuild* of the
+        resident shards (``self.rebuilds`` increments: width overflow,
+        or the host store advancing without this mirror) replaces the
+        backing store wholesale — rebuild any long-lived cache when that
+        counter changes. The view itself always resolves the mirror's
+        current store, so it never serves an orphaned pre-rebuild copy.
+        """
+        if self.storage != "host":
+            raise ValueError("row_source() requires storage='host'")
+        if which == "prev":
+            self._ensure_prev_fits()
+            return SnapshotRowView(self, direction, {})
+        if which != "cur":
+            raise ValueError(f"which must be prev|cur, got {which!r}")
+        # derives once per step (both directions) and marks the step
+        # pending, so end_step patches the shards in place — the bounded
+        # path gets the same O(|ΔV|·D) advance as step_snapshot users
+        self._ensure_step_cur_host()
+        tids, merged = self._cur_host[direction]
+        return SnapshotRowView(
+            self, direction,
+            {int(v): merged[i] for i, v in enumerate(tids)})
+
+
+class SnapshotRowView:
+    """Read-only ``HostRowStore``-API view over one direction of a
+    host-mode :class:`DeviceSnapshotStore`, plus per-step row patches.
+
+    Duck-types the three members ``DeviceRowCache`` needs (``n``, ``d``,
+    ``gather``); ``patches`` maps vertex id -> replacement row
+    (``int32[d]``, sentinel-padded). The backing shards are resolved
+    through the mirror on every access, so a width rebuild swaps in the
+    new store here transparently (callers holding a ``DeviceRowCache``
+    over the view still need to rebuild it then — the cached row width
+    changes; see :meth:`DeviceSnapshotStore.row_source`).
+    """
+
+    def __init__(self, mirror: "DeviceSnapshotStore", direction: str,
+                 patches: Dict[int, np.ndarray]):
+        self.mirror = mirror
+        self.direction = direction
+        self.patches = patches
+        self.n = mirror.n
+
+    @property
+    def base(self):
+        return self.mirror._prev[self.direction]
+
+    @property
+    def d(self) -> int:
+        return self.base.d
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        """Dense ``int32[K, d]`` rows with patches applied (clip
+        semantics identical to :meth:`HostRowStore.gather`)."""
+        out = self.base.gather(ids)
+        if self.patches:
+            flat = np.clip(np.asarray(ids, np.int64).reshape(-1), 0, self.n)
+            for i, v in enumerate(flat):
+                p = self.patches.get(int(v))
+                if p is not None:
+                    out[i] = p
+        return out

@@ -30,6 +30,19 @@ from ..core.estimate import GraphStats
 Edge = Tuple[int, int]
 
 
+def padded_width(max_len: int, d_max: Optional[int] = None, lane: int = 8,
+                 strict: bool = False) -> int:
+    """The one padded-row width rule: ``max(d_max or max_len, 1)`` rounded
+    up to a multiple of ``lane``. ``strict=True`` raises when ``d_max``
+    is below ``max_len`` (callers that refuse truncation outright, e.g.
+    the host row store)."""
+    if strict and d_max is not None and d_max < max_len:
+        raise ValueError(f"d_max={d_max} below the max degree {max_len}")
+    d = max_len if d_max is None else d_max
+    d = max(d, 1)
+    return ((d + lane - 1) // lane) * lane
+
+
 def pad_rows(adj: Sequence[np.ndarray], sentinel: int,
              d_max: Optional[int] = None, lane: int = 8,
              on_overflow: str = "raise") -> np.ndarray:
@@ -42,9 +55,7 @@ def pad_rows(adj: Sequence[np.ndarray], sentinel: int,
     ``RuntimeWarning`` — never a silent truncation.
     """
     max_len = max((len(a) for a in adj), default=0)
-    d = max_len if d_max is None else d_max
-    d = max(d, 1)
-    d = ((d + lane - 1) // lane) * lane
+    d = padded_width(max_len, d_max=d_max, lane=lane)
     if max_len > d:
         overfull = sum(1 for a in adj if len(a) > d)
         msg = (f"padded rows truncated: {overfull} row(s) exceed the "

@@ -2,7 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.enumerate \
         --pattern chordal-square --n 2000 --edges 8000 [--devices 8] \
-        [--engine dist|jax|ref] [--hot 64] [--rebalance] [--vcbc]
+        [--engine dist|jax|ref|oocache] [--hot 64] [--rebalance] [--vcbc]
+
+``--engine oocache`` runs the out-of-core fetch path: adjacency rows live
+in host-RAM shards, device memory holds only a bounded row cache
+(``--cache-frac`` of N rows + ``--hot`` pinned top-degree rows) and the
+next chunk's rows are prefetched while the current chunk computes; the
+report adds hit rate / cold rows / bytes moved per DBQ level.
 
 Generates a synthetic graph, compiles the best execution plan (Alg. 3 with
 all optimizations), and runs the chosen engine through the unified
@@ -52,7 +58,8 @@ def _run_continuous(args) -> None:
         from ..core.executor import SBenuJaxBackend
         d, dd = stream_width_floors(g0, batches)
         backend = SBenuJaxBackend(collect="counts", d_min=d,
-                                  delta_d_min=dd)
+                                  delta_d_min=dd,
+                                  snapshot_storage=args.snapshot_storage)
     total_p = total_m = 0
     t_all = 0.0
     for step, batch in enumerate(batches, 1):
@@ -81,12 +88,25 @@ def main():
     ap.add_argument("--graph", choices=["er", "powerlaw"],
                     default="powerlaw")
     ap.add_argument("--engine",
-                    choices=["dist", "jax", "ref", "sbenu", "sbenu-jax"],
+                    choices=["dist", "jax", "ref", "oocache", "sbenu",
+                             "sbenu-jax"],
                     default="dist")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (set before jax init)")
     ap.add_argument("--batch-per-shard", type=int, default=256)
-    ap.add_argument("--hot", type=int, default=64)
+    ap.add_argument("--hot", type=int, default=64,
+                    help="replicated/pinned top-degree rows (dist, oocache)")
+    ap.add_argument("--cache-frac", type=float, default=0.15,
+                    help="oocache: device LRU slab size as a fraction of N")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="oocache: disable the async next-chunk prefetch")
+    ap.add_argument("--snapshot-storage", choices=["device", "host"],
+                    default="device",
+                    help="sbenu-jax: 'host' keeps resident blocks in "
+                         "host-RAM shards (zero persistent HBM between "
+                         "steps; per-step compute still transfers full "
+                         "blocks — slower compat path until the OOC "
+                         "delta-frontier engine lands)")
     ap.add_argument("--rebalance", action="store_true")
     ap.add_argument("--vcbc", action="store_true")
     ap.add_argument("--steps", type=int, default=3,
@@ -121,6 +141,10 @@ def main():
     if args.engine == "dist":
         ex = make_executor("dist", hot=args.hot, rebalance=args.rebalance)
         batch = args.batch_per_shard * len(jax.devices())
+    elif args.engine == "oocache":
+        ex = make_executor("oocache", cache_frac=args.cache_frac,
+                           hot=args.hot, prefetch=not args.no_prefetch)
+        batch = args.batch_per_shard
     else:
         ex = make_executor(args.engine)
         batch = args.batch_per_shard
@@ -138,6 +162,23 @@ def main():
               f"(x {plan.n * 4}B row bytes = {cold * 512 / 1e6:.1f}MB class)")
         print(f"per-shard matches  : "
               f"{st.extras['per_shard_counts'].tolist()}")
+    elif args.engine == "oocache":
+        c = st.extras["cache"]
+        print(f"host store         : {st.extras['host_store_bytes'] / 1e6:.1f}MB "
+              f"in {st.extras['host_store_shards']} shards")
+        print(f"device resident    : {st.extras['device_resident_rows']} rows "
+              f"({st.extras['device_resident_bytes'] / 1e6:.2f}MB = "
+              f"{st.extras['device_resident_rows'] / (g.n + 1) * 100:.1f}% of N)")
+        print(f"row queries        : {c['queries']} ({c['hit_rate'] * 100:.1f}% "
+              f"served without a host fetch)")
+        print(f"cold rows fetched  : {c['cold_rows']} "
+              f"({c['bytes_demand'] / 1e6:.2f}MB demand + "
+              f"{c['bytes_prefetch'] / 1e6:.2f}MB prefetch)")
+        print(f"prefetch used      : {c['prefetch_used']} rows; "
+              f"evictions {c['evictions']}")
+        for lvl, (q, cold, b) in c["per_level"].items():
+            print(f"  DBQ level {lvl}      : {q:>9} queries  {cold:>8} cold  "
+                  f"{b / 1e6:8.2f}MB")
     elif args.engine == "ref":
         print(f"remote DBQ rows    : {st.extras['remote_queries']}")
 

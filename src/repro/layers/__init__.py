@@ -1,0 +1,1 @@
+"""layers package."""

@@ -103,6 +103,87 @@ def test_rowstore_fetch_unit():
     assert res["ok"] and res["drops"] == 0
 
 
+# --------------------------------------------------------------------------
+# DistributedRowStore hot-row boundary (in-process, single-device mesh:
+# S=1 makes the all_to_all a local exchange, so this stays in the fast
+# tier). The fetch must match the unsharded padded-adjacency oracle with
+# ids exactly at n_hot_lo, with zero hot rows, and with every row hot.
+# --------------------------------------------------------------------------
+
+
+def _fetch_rows(g, hot, ids, req_cap=64):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.distributed.rowstore import (build_row_shards,
+                                            make_distributed_fetch)
+    import numpy as np
+    shards_np, hot_np, spec = build_row_shards(g, 1, hot=hot)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("s",))
+    fetch = make_distributed_fetch(spec, "s", req_cap=req_cap)
+
+    def local(shards, hot_rows, ids):
+        rows, cold, drops = fetch(ids[0], shards[0], hot_rows)
+        return rows[None], cold[None], drops[None]
+
+    f = jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P("s", None, None), P(None, None), P("s", None)),
+        out_specs=(P("s", None, None), P("s"), P("s")),
+        check_vma=False))
+    rows, cold, drops = f(shards_np, hot_np, ids[None].astype(np.int32))
+    import numpy as _np
+    oracle = shards_np.reshape(-1, spec.d)[:spec.n + 1]
+    return (_np.asarray(rows)[0], int(_np.sum(_np.asarray(cold))),
+            int(_np.sum(_np.asarray(drops))), spec, oracle)
+
+
+@pytest.mark.parametrize("hot", [0, 8, 100])   # zero / partial / all hot
+def test_rowstore_hot_boundary_matches_unsharded_oracle(hot):
+    import numpy as np
+    from repro.graph.generate import erdos_renyi
+    g = erdos_renyi(100, 300, seed=0)
+    n_hot_lo = g.n - min(hot, g.n)
+    # ids straddling the boundary: n_hot_lo - 1 (cold side), n_hot_lo
+    # (first hot row), n_hot_lo + 1, plus extremes and the sentinel
+    cand = [0, 1, n_hot_lo - 1, n_hot_lo, n_hot_lo + 1, g.n - 1, g.n]
+    ids = np.array([i for i in cand if 0 <= i <= g.n], np.int64)
+    ids = np.pad(ids, (0, 16 - ids.size), constant_values=g.n)
+    rows, cold, drops, spec, oracle = _fetch_rows(g, hot, ids)
+    assert drops == 0
+    assert spec.hot == min(hot, g.n)
+    for i, v in enumerate(ids):
+        np.testing.assert_array_equal(rows[i], oracle[v], err_msg=str(v))
+    # hot rows are served locally: they never count as cold traffic
+    want_cold = len({int(v) for v in ids if v < n_hot_lo})
+    assert cold == want_cold
+
+
+def test_rowstore_all_hot_serves_everything_locally():
+    import numpy as np
+    from repro.graph.generate import powerlaw
+    g = powerlaw(60, 3, seed=5)
+    rng = np.random.default_rng(2)
+    ids = rng.integers(0, g.n + 1, size=32).astype(np.int64)
+    rows, cold, drops, spec, oracle = _fetch_rows(g, hot=g.n, ids=ids)
+    assert cold == 0 and drops == 0       # every row replicated
+    for i, v in enumerate(ids):
+        np.testing.assert_array_equal(rows[i], oracle[v])
+
+
+def test_rowstore_zero_hot_all_requests_remote():
+    import numpy as np
+    from repro.graph.generate import erdos_renyi
+    g = erdos_renyi(50, 150, seed=3)
+    ids = np.arange(16, dtype=np.int64)
+    rows, cold, drops, spec, oracle = _fetch_rows(g, hot=0, ids=ids)
+    assert drops == 0
+    assert cold == 16                     # no replication: all cold
+    for i, v in enumerate(ids):
+        np.testing.assert_array_equal(rows[i], oracle[v])
+
+
 @pytest.mark.slow
 def test_int8_compressed_psum_error_feedback():
     out = run_sub("""

@@ -1,0 +1,345 @@
+"""Out-of-core fetch path: HostRowStore, DeviceRowCache, oocache engine,
+and the host-mode streaming snapshot store.
+
+The correctness bar mirrors the other engines: exact agreement with the
+reference interpreter / brute force at *any* cache capacity — capacity
+only changes how many rows cross from the host, which the counters must
+report faithfully (they are the Fig. 10 measurement).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import make_executor, plan_enu_count
+from repro.core.pattern import get_pattern
+from repro.core.plangen import generate_best_plan
+from repro.distributed.rowcache import DeviceRowCache
+from repro.graph.generate import erdos_renyi, powerlaw
+from repro.graph.hoststore import HostRowStore
+from repro.graph.storage import DiGraph
+
+GRAPHS = {
+    "er": erdos_renyi(64, 256, seed=11),
+    "pl": powerlaw(64, 4, seed=12),
+}
+
+
+# --------------------------------------------------------------------------
+# HostRowStore: sharded host build == the dense padded_adjacency oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rps", [4, 17, 65, 4096])
+def test_host_store_matches_padded_adjacency(rps):
+    g = GRAPHS["pl"]
+    store = HostRowStore.from_graph(g, rows_per_shard=rps)
+    rows, _ = g.padded_adjacency(lane=8)
+    oracle = np.concatenate(
+        [rows, np.full((1, rows.shape[1]), g.n, np.int32)], axis=0)
+    assert store.n_rows == g.n + 1
+    assert store.d == rows.shape[1]
+    np.testing.assert_array_equal(store.to_rows(), oracle)
+    # random id batches, including sentinel and out-of-range ids
+    rng = np.random.default_rng(0)
+    ids = rng.integers(-2, g.n + 3, size=50)
+    got = store.gather(ids)
+    np.testing.assert_array_equal(got, oracle[np.clip(ids, 0, g.n)])
+
+
+def test_host_store_shard_count_and_set_rows():
+    g = GRAPHS["er"]
+    store = HostRowStore.from_graph(g, rows_per_shard=10)
+    assert len(store.shards) == -(-(g.n + 1) // 10)
+    assert store.nbytes == sum(s.nbytes for s in store.shards)
+    row = np.full(store.d, g.n, np.int32)
+    row[:2] = [1, 5]
+    store.set_rows(np.array([3]), row[None])
+    np.testing.assert_array_equal(store.row(3), row)
+    with pytest.raises(ValueError):
+        store.set_rows(np.array([g.n]), row[None])   # sentinel immutable
+
+
+def test_host_store_from_digraph_both_directions():
+    g = DiGraph.from_edges(6, [(0, 1), (0, 2), (3, 0), (4, 5)])
+    out = HostRowStore.from_digraph(g, "out", rows_per_shard=3)
+    inn = HostRowStore.from_digraph(g, "in", rows_per_shard=3)
+    assert sorted(int(x) for x in out.row(0) if x != 6) == [1, 2]
+    assert sorted(int(x) for x in inn.row(0) if x != 6) == [3]
+    assert list(out.row(6)) == [6] * out.d          # sentinel row
+
+
+# --------------------------------------------------------------------------
+# DeviceRowCache: exact at any capacity; counters honest
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cap,hot", [(0, 0), (5, 0), (0, 8), (5, 8),
+                                     (64, 64), (1000, 0)])
+def test_cache_serves_exact_rows_any_capacity(cap, hot):
+    g = GRAPHS["pl"]
+    store = HostRowStore.from_graph(g, rows_per_shard=16)
+    cache = DeviceRowCache(store, cap, hot=hot)
+    oracle = store.to_rows()
+    rng = np.random.default_rng(1)
+    for lvl in range(4):
+        ids = rng.integers(0, g.n + 1, size=40)
+        got = np.asarray(cache.lookup(ids, level=lvl))
+        np.testing.assert_array_equal(got, oracle[ids])
+    st = cache.stats
+    assert st.lookups == 4
+    assert st.queries <= 160                # sentinel ids are not queries
+    assert cache.device_rows == \
+        cap + 2 * (cap // 4) + min(hot, g.n) + 1
+
+
+def test_cache_counters_and_lru_reuse():
+    g = GRAPHS["er"]
+    store = HostRowStore.from_graph(g)
+    cache = DeviceRowCache(store, capacity_rows=16, hot=0)
+    ids = np.arange(8)
+    cache.lookup(ids)
+    st = cache.stats
+    assert st.queries == 8 and st.cold_rows == 8
+    assert st.bytes_demand == 8 * store.d * 4
+    cache.lookup(ids)                      # second pass: all slab hits
+    assert st.cold_rows == 8 and st.queries == 16
+    assert st.hit_rate == pytest.approx(0.5)
+    # within-batch dedup: 8 copies of one id cost at most one cold row
+    cache.lookup(np.full(8, 60))
+    assert st.cold_rows == 9
+
+
+def test_cache_hot_rows_pinned_never_cold():
+    g = GRAPHS["pl"]
+    store = HostRowStore.from_graph(g)
+    cache = DeviceRowCache(store, capacity_rows=0, hot=8)
+    hot_ids = np.arange(g.n - 8, g.n)      # ascending-degree relabel: top 8
+    got = np.asarray(cache.lookup(hot_ids))
+    np.testing.assert_array_equal(got, store.to_rows()[hot_ids])
+    assert cache.stats.cold_rows == 0
+    assert cache.stats.hot_hits == 8
+
+
+def test_cache_prefetch_stages_then_serves_without_demand_fetch():
+    g = GRAPHS["er"]
+    store = HostRowStore.from_graph(g)
+    cache = DeviceRowCache(store, capacity_rows=32, hot=0, stage_rows=16)
+    cache.prefetch(np.arange(10))
+    assert cache.stats.prefetch_rows == 10
+    assert cache.stats.bytes_prefetch == 10 * store.d * 4
+    got = np.asarray(cache.lookup(np.arange(10)))
+    np.testing.assert_array_equal(got, store.to_rows()[:10])
+    assert cache.stats.cold_rows == 0       # served from the staged block
+    assert cache.stats.prefetch_used == 10
+    # double buffering: a third staged block forces adoption of the oldest
+    cache.prefetch(np.arange(10, 14))
+    cache.prefetch(np.arange(14, 18))
+    cache.prefetch(np.arange(18, 22))
+    assert len(cache._staged) == 2
+
+
+def test_cache_invalidate_after_in_place_store_update():
+    """A cache kept alive while the backing shards are patched in place
+    (the host-mode snapshot advance) must serve the new rows after
+    invalidate() — slab entries and pinned hot rows alike."""
+    g = GRAPHS["er"]
+    store = HostRowStore.from_graph(g, rows_per_shard=16)
+    cache = DeviceRowCache(store, capacity_rows=16, hot=8)
+    cold_v, hot_v = 5, g.n - 2              # slab-cached / pinned-hot ids
+    cache.lookup(np.array([cold_v, hot_v]))  # warm both paths
+    newrow = np.full(store.d, g.n, np.int32)
+    newrow[0] = 0
+    store.set_rows(np.array([cold_v, hot_v]), np.stack([newrow, newrow]))
+    cache.invalidate(np.array([cold_v, hot_v]))
+    rows = np.asarray(cache.lookup(np.array([cold_v, hot_v])))
+    np.testing.assert_array_equal(rows[0], newrow)
+    np.testing.assert_array_equal(rows[1], newrow)
+
+
+# --------------------------------------------------------------------------
+# oocache engine: exact vs ref under a bounded device cache (< 25% of N)
+# --------------------------------------------------------------------------
+
+
+def _bounded_ooc(g, **kw):
+    cap = max(1, int(g.n * 0.12))
+    hot = max(1, int(g.n * 0.04))
+    ex = make_executor("oocache", cache_rows=cap, hot=hot, **kw)
+    # the acceptance bound counts the WHOLE device footprint: slab +
+    # both prefetch staging buffers + pinned hot rows + sentinel
+    assert cap + 2 * (cap // 4) + hot + 1 < 0.25 * g.n
+    return ex
+
+
+def test_oocache_forced_overflow_rechunks_and_stays_exact():
+    g = GRAPHS["pl"]
+    p = get_pattern("house")
+    plan = generate_best_plan(p, g.stats())
+    want = make_executor("ref").run(plan, g, batch=32).count
+    st = _bounded_ooc(g).run(plan, g, batch=16,
+                             caps=[8] * plan_enu_count(plan),
+                             max_retries=12)
+    assert st.count == want
+    assert st.chunks_split > 0
+
+
+def test_oocache_match_set_exact_not_just_count():
+    g = GRAPHS["pl"]
+    p = get_pattern("clique4")
+    plan = generate_best_plan(p, g.stats())
+    ref = make_executor("ref").run(plan, g, batch=32, collect_matches=True)
+    ooc = _bounded_ooc(g).run(plan, g, batch=32, collect_matches=True)
+    got = {tuple(int(x) for x in r) for r in ooc.matches}
+    want = {tuple(int(x) for x in r) for r in ref.matches}
+    assert got == want and len(ooc.matches) == len(got)
+    assert len(want) > 0                    # the pattern occurs
+
+
+def test_oocache_zero_capacity_still_exact():
+    g = GRAPHS["er"]
+    p = get_pattern("triangle")
+    plan = generate_best_plan(p, g.stats())
+    want = make_executor("ref").run(plan, g, batch=32).count
+    st = make_executor("oocache", cache_rows=0, hot=0,
+                       prefetch=False).run(plan, g, batch=32)
+    assert st.count == want
+    c = st.extras["cache"]
+    assert c["hit_rate"] < 1.0 and c["cold_rows"] > 0
+
+
+def test_oocache_universe_plan_square():
+    """The square's wedge order consumes V(G) (detached vertex): the OOC
+    segments must thread the universe chunk like engine_jax."""
+    g = GRAPHS["er"]
+    p = get_pattern("square")
+    plan = generate_best_plan(p, g.stats())
+    want = make_executor("ref").run(plan, g, batch=32).count
+    st = _bounded_ooc(g).run(plan, g, batch=32, universe_chunk=16)
+    assert st.count == want
+
+
+def test_oocache_reports_fetch_accounting():
+    g = GRAPHS["pl"]
+    p = get_pattern("house")
+    plan = generate_best_plan(p, g.stats())
+    st = _bounded_ooc(g).run(plan, g, batch=32)
+    c = st.extras["cache"]
+    assert c["queries"] > 0 and c["cold_rows"] > 0
+    assert c["bytes_moved"] == c["bytes_demand"] + c["bytes_prefetch"]
+    assert 0.0 < c["hit_rate"] < 1.0
+    # per-level ledger covers every DBQ level and sums to the totals
+    assert sum(q for q, _, _ in c["per_level"].values()) == c["queries"]
+    assert sum(cold for _, cold, _ in c["per_level"].values()) \
+        == c["cold_rows"]
+    assert st.extras["device_resident_rows"] < 0.25 * (g.n + 1)
+    assert st.extras["host_store_bytes"] > 0
+
+
+def test_oocache_prefetch_overlap_used():
+    g = GRAPHS["er"]
+    p = get_pattern("path5")
+    plan = generate_best_plan(p, g.stats())
+    st = _bounded_ooc(g).run(plan, g, batch=8)
+    assert st.extras["cache"]["prefetch_used"] > 0
+
+
+# --------------------------------------------------------------------------
+# Host-mode streaming snapshot store (HostRowStore behind S-BENU)
+# --------------------------------------------------------------------------
+
+
+def test_snapshot_host_storage_stream_conformance():
+    """sbenu-jax over host-RAM snapshot shards == interpreter == oracle,
+    with exactly one rebuild (the stream start): every later step advances
+    the shards in place."""
+    from repro.core.estimate import GraphStats
+    from repro.core.executor import SBenuJaxBackend
+    from repro.core.sbenu import (generate_best_sbenu_plans, run_timestep,
+                                  snapshot_diff_oracle)
+    from repro.graph.dynamic import (DeviceSnapshotStore, SnapshotStore,
+                                     stream_width_floors)
+    from repro.graph.generate import edge_stream
+
+    p = get_pattern("q2'")
+    g0, batches = edge_stream(n=24, m_init=110, steps=3, batch=24,
+                              seed=17, delete_frac=0.4)
+    store_h = SnapshotStore(g0)
+    store_r = SnapshotStore(g0)
+    plans = generate_best_sbenu_plans(
+        p, GraphStats(24, 110, delta_edges=24))
+    d, dd = stream_width_floors(g0, batches)
+    backend = SBenuJaxBackend(snapshot_storage="host", d_min=d,
+                              delta_d_min=dd)
+    for batch in batches:
+        want_p, want_m = snapshot_diff_oracle(p, store_h, batch)
+        jp, jm, _ = run_timestep(p, plans, store_h, batch,
+                                 backend=backend, chunk=16)
+        rp, rm, _ = run_timestep(p, plans, store_r, batch, engine="ref")
+        assert jp == rp == want_p
+        assert jm == rm == want_m
+    mirror = [m for m in store_h._mirrors
+              if isinstance(m, DeviceSnapshotStore)][0]
+    assert mirror.storage == "host"
+    assert mirror.rebuilds == 1
+
+
+def test_snapshot_row_source_only_stream_advances_in_place():
+    """A stream served ONLY through row_source() (never step_snapshot)
+    must still advance the host shards in place — one rebuild for the
+    whole stream — and must survive a step whose inserts outgrow the
+    pinned row width (wider rebuild, not a crash)."""
+    from repro.graph.dynamic import DeviceSnapshotStore, SnapshotStore
+    from repro.graph.storage import DiGraph
+
+    n = 16
+    g0 = DiGraph.from_edges(n, [(0, 1), (1, 2), (2, 3)])
+    store = SnapshotStore(g0)
+    mirror = DeviceSnapshotStore(store, storage="host")
+    # step 1: small insert, served via row_source only
+    store.begin_step([("+", 0, 2)])
+    view = mirror.row_source("out", "cur")
+    assert sorted(int(x) for x in view.gather([0])[0] if x != n) == [1, 2]
+    store.end_step()
+    assert mirror.rebuilds == 1
+    assert sorted(store.prev.out[0]) == [1, 2]
+    # step 2: outgrow vertex 0's pinned lane-8 width (12 inserts at once)
+    ins = list(range(3, 15))
+    store.begin_step([("+", 0, w) for w in ins])
+    view = mirror.row_source("out", "cur")
+    got = sorted(int(x) for x in view.gather([0])[0] if x != n)
+    assert got == [1, 2] + ins
+    store.end_step()
+    assert mirror.rebuilds == 2            # wider rebuild, then in place
+    # step 3: back to in-place advance at the new width
+    store.begin_step([("-", 0, 1)])
+    view = mirror.row_source("out", "cur")
+    assert sorted(int(x) for x in view.gather([0])[0] if x != n) \
+        == [2] + ins
+    store.end_step()
+    assert mirror.rebuilds == 2
+    assert sorted(store.prev.out[0]) == [2] + ins
+
+
+def test_snapshot_row_source_bounded_serving_matches_get_adj():
+    """row_source('cur'/'prev') through a small DeviceRowCache must agree
+    with the SnapshotStore get_adj oracle mid-step — the bounded-device
+    fetch path for snapshots whose resident blocks would not fit HBM."""
+    from repro.graph.dynamic import DeviceSnapshotStore, SnapshotStore
+    from repro.graph.generate import edge_stream
+
+    g0, batches = edge_stream(n=20, m_init=80, steps=1, batch=16,
+                              seed=9, delete_frac=0.5)
+    store = SnapshotStore(g0)
+    mirror = DeviceSnapshotStore(store, storage="host")
+    store.begin_step(batches[0])
+    for direction in ("out", "in"):
+        for which, op in (("prev", "-"), ("cur", "+")):
+            view = mirror.row_source(direction, which)
+            cache = DeviceRowCache(view, capacity_rows=3, hot=2)
+            rows = np.asarray(cache.lookup(np.arange(store.n + 1)))
+            for v in range(store.n):
+                want = sorted(store.get_adj(v, "either", direction, op))
+                got = sorted(int(x) for x in rows[v] if x != store.n)
+                assert got == want, (direction, which, v)
+            assert cache.device_rows <= 6   # 3 slab + 2 hot + sentinel
+    store.end_step()

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Offline link checker for the repo's markdown docs.
+
+    python tools/check_links.py README.md docs/*.md
+
+Verifies that every relative markdown link / image target resolves to a
+file or directory in the repo (anchors are stripped; external schemes —
+http(s), mailto — are skipped: CI must not depend on the network). Exits
+non-zero listing every broken link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def check(path: Path) -> list:
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+        if in_code:
+            continue
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                broken.append((path, lineno, target))
+    return broken
+
+
+def main(argv) -> int:
+    files = [Path(a) for a in argv]
+    if not files:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    broken = []
+    for f in files:
+        if not f.exists():
+            broken.append((f, 0, "<file missing>"))
+            continue
+        broken.extend(check(f))
+    if broken:
+        for path, lineno, target in broken:
+            print(f"BROKEN {path}:{lineno}: {target}")
+        return 1
+    print(f"all links OK in {len(files)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

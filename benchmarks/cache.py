@@ -15,14 +15,17 @@ Usage::
 
     PYTHONPATH=src python -m benchmarks.cache [--smoke] [--json PATH]
 
-``--json`` writes a ``BENCH_cache.json`` artifact (CI uploads it);
-``--smoke`` shrinks the graph so the sweep fits the CI budget.
+The ``BENCH_cache.json`` artifact lands in the repo root by default (it
+is committed with each PR so the perf trajectory is tracked in-repo; CI
+also uploads it); ``--json`` redirects it. ``--smoke`` shrinks the graph
+so the sweep fits the CI budget.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 from typing import Dict, List
 
 from repro.core.executor import make_executor
@@ -101,7 +104,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small graph + short sweep (CI budget)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write a BENCH_cache.json artifact")
+                    help="write the BENCH_cache.json artifact here "
+                         "(default: the repo root)")
     args = ap.parse_args()
     n = 150 if args.smoke else 400
     fracs = (0.05, 0.20) if args.smoke else (0.02, 0.05, 0.10, 0.24)
@@ -109,15 +113,17 @@ def main() -> None:
     t1.show()
     t2, records = run_device_cache(n, fracs=fracs)
     t2.show()
-    if args.json:
-        payload = dict(
-            benchmark="cache",
-            figure="Fig. 10 + device-cache sweep",
-            graph=dict(kind="powerlaw", n=n, m_per_node=4, seed=2),
-            records=records)
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"\nwrote {args.json} ({len(records)} records)")
+    path = args.json or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_cache.json")
+    payload = dict(
+        benchmark="cache",
+        figure="Fig. 10 + device-cache sweep",
+        graph=dict(kind="powerlaw", n=n, m_per_node=4, seed=2),
+        records=records)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {path} ({len(records)} records)")
 
 
 if __name__ == "__main__":

@@ -1,30 +1,40 @@
 """Fig. 12 reproduction + streaming-engine throughput: S-BENU per time step.
 
-Two comparisons, both per time step of a random update stream:
+Three comparisons, all per time step of a random update stream:
 
 * interpreter (``SBenuRefEngine`` behind the unified Executor) vs the
   vectorized JIT delta-frontier engine (``sbenu-jax``) — the headline of
   the vectorization work: >= 10x on a >= 10k-vertex dynamic graph;
+* interpreter vs ``sbenu-jax`` vs ``sbenu-dist`` (the shard_map SPMD
+  engine over the mesh-sharded six-block snapshot) — the scaling table
+  for the distributed streaming path (``--dist``; run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` or on a real
+  mesh for multi-shard numbers);
 * incremental enumeration vs recompute-from-scratch (the Delta-BiGJoin
   comparison class) — kept from the original Fig. 12 table.
 
 CLI::
 
     PYTHONPATH=src python benchmarks/sbenu_bench.py \
-        [--n 10000 --edges 50000 --steps 3 --update-batch 2000]
+        [--n 10000 --edges 50000 --steps 3 --update-batch 2000] [--dist]
     PYTHONPATH=src python benchmarks/sbenu_bench.py --smoke   # CI gate
 
-``--smoke`` runs a small stream and *asserts* count conformance between the
-interpreter and the JIT engine, so every push exercises the streaming path.
+``--smoke`` runs a small stream and *asserts* count conformance between
+the interpreter, the JIT engine, and the mesh engine, so every push
+exercises the streaming paths; it writes ``BENCH_sbenu.json`` and
+``BENCH_sbenu_dist.json`` into the repo root (committed with the PR, so
+the perf trajectory is tracked in-repo) unless ``--json`` points
+elsewhere.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 from repro.core.estimate import GraphStats
-from repro.core.executor import SBenuJaxBackend
+from repro.core.executor import SBenuDistBackend, SBenuJaxBackend
 from repro.core.pattern import get_pattern
 from repro.core.sbenu import (enumerate_matches_digraph,
                               generate_best_sbenu_plans, run_timestep)
@@ -35,10 +45,13 @@ from repro.graph.generate import edge_stream
 try:
     from .common import Table
 except ImportError:                      # run as a script: python benchmarks/…
-    import os
     import sys
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     from common import Table
+
+#: default landing spot for BENCH_*.json artifacts: the repo root, so the
+#: smoke numbers are committed alongside the code they measure
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def bench_stream(pname: str, n: int, m_init: int, steps: int,
@@ -83,6 +96,51 @@ def bench_stream(pname: str, n: int, m_init: int, steps: int,
             table.add(pname, step, ctr_j.matches_plus, ctr_j.matches_minus,
                       "-", f"{t_jit:.3f}", "-")
     return (sum(speedups) / len(speedups)) if speedups else 0.0
+
+
+def bench_stream3(pname: str, n: int, m_init: int, steps: int,
+                  update_batch: int, seed: int = 5, chunk: int = 1024,
+                  run_ref: bool = True, hot: int = 0,
+                  rebalance: bool = False, table: Table = None) -> None:
+    """One stream mirrored into three stores: interpreter vs the JIT
+    engine vs the shard_map mesh engine, per time step. Counts are
+    asserted equal across all engines on every step."""
+    p = get_pattern(pname)
+    g0, batches = edge_stream(n=n, m_init=m_init, steps=steps,
+                              batch=update_batch, seed=seed)
+    stats = GraphStats(n, m_init, delta_edges=update_batch)
+    plans = generate_best_sbenu_plans(p, stats)
+    d, dd = stream_width_floors(g0, batches)
+    stores = {e: SnapshotStore(g0) for e in ("ref", "jax", "dist")}
+    backends = {
+        "jax": SBenuJaxBackend(collect="counts", d_min=d, delta_d_min=dd),
+        "dist": SBenuDistBackend(collect="counts", d_min=d, delta_d_min=dd,
+                                 hot=hot, rebalance=rebalance),
+    }
+    for step, batch in enumerate(batches, 1):
+        times, counts = {}, {}
+        if run_ref:
+            t0 = time.perf_counter()
+            _, _, ctr = run_timestep(p, plans, stores["ref"], batch,
+                                     engine="ref", collect="counts",
+                                     chunk=chunk)
+            times["ref"] = time.perf_counter() - t0
+            counts["ref"] = (ctr.matches_plus, ctr.matches_minus)
+        for e in ("jax", "dist"):
+            t0 = time.perf_counter()
+            _, _, ctr = run_timestep(p, plans, stores[e], batch,
+                                     collect="counts", chunk=chunk,
+                                     backend=backends[e])
+            times[e] = time.perf_counter() - t0
+            counts[e] = (ctr.matches_plus, ctr.matches_minus)
+        assert len(set(counts.values())) == 1, \
+            f"engine mismatch at step {step}: {counts}"
+        dp, dm = counts["jax"]
+        if table is not None:
+            table.add(pname, step, dp, dm,
+                      f"{times['ref']:.3f}" if run_ref else "-",
+                      f"{times['jax']:.3f}", f"{times['dist']:.3f}",
+                      f"{times['jax'] / max(times['dist'], 1e-9):.2f}x")
 
 
 def run() -> Table:
@@ -140,22 +198,29 @@ def main() -> None:
     ap.add_argument("--scratch", action="store_true",
                     help="also run the Fig. 12 recompute-from-scratch "
                          "comparison")
+    ap.add_argument("--dist", action="store_true",
+                    help="run the interpreter-vs-jit-vs-dist table "
+                         "instead of the two-engine one")
     ap.add_argument("--smoke", action="store_true",
                     help="small stream + conformance assert (CI gate)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the result table as a JSON artifact")
+                    help="write the result table as a JSON artifact "
+                         "(default: BENCH_sbenu.json in the repo root "
+                         "when --smoke)")
     args = ap.parse_args()
 
-    def emit(table):
-        if args.json:
+    def emit(table, path, name="sbenu"):
+        if path:
             import json
-            payload = dict(benchmark="sbenu", title=table.title,
+            payload = dict(benchmark=name, title=table.title,
                            columns=table.columns,
                            rows=[[str(x) for x in r] for r in table.rows])
-            with open(args.json, "w") as f:
+            with open(path, "w") as f:
                 json.dump(payload, f, indent=2)
-            print(f"wrote {args.json} ({len(table.rows)} rows)")
+            print(f"wrote {path} ({len(table.rows)} rows)")
 
+    dist_cols = ["pattern", "step", "dR+", "dR-", "interp s", "jit s",
+                 "dist s", "jit/dist"]
     if args.smoke:
         t = Table("sbenu_bench --smoke: interpreter vs sbenu-jax",
                   ["pattern", "step", "dR+", "dR-", "interp s", "jit s",
@@ -165,13 +230,34 @@ def main() -> None:
                          update_batch=100, seed=args.seed, chunk=64,
                          table=t)
         t.show()
-        emit(t)
+        emit(t, args.json or os.path.join(ROOT, "BENCH_sbenu.json"))
+        td = Table("sbenu_bench --smoke: interpreter vs sbenu-jax vs "
+                   "sbenu-dist", dist_cols)
+        bench_stream3("q1'", n=300, m_init=1500, steps=2,
+                      update_batch=100, seed=args.seed, chunk=64, table=td)
+        td.show()
+        # the dist artifact follows --json: <base>_dist.json next to it
+        dist_path = (os.path.splitext(args.json)[0] + "_dist.json"
+                     if args.json
+                     else os.path.join(ROOT, "BENCH_sbenu_dist.json"))
+        emit(td, dist_path, name="sbenu_dist")
         run_scratch().show()             # asserts vs the snapshot diff
-        print("smoke OK: interpreter == sbenu-jax on every step, "
-              "incremental == recompute-from-scratch diff")
+        print("smoke OK: interpreter == sbenu-jax == sbenu-dist on every "
+              "step, incremental == recompute-from-scratch diff")
         return
     if args.scratch:
         run_scratch().show()
+    if args.dist:
+        td = Table(f"S-BENU streaming engines (3-way) on n={args.n} "
+                   f"m={args.edges} ({args.update_batch} updates/step)",
+                   dist_cols)
+        bench_stream3(args.pattern, n=args.n, m_init=args.edges,
+                      steps=args.steps, update_batch=args.update_batch,
+                      seed=args.seed, chunk=args.chunk,
+                      run_ref=not args.no_ref, table=td)
+        td.show()
+        emit(td, args.json, name="sbenu_dist")
+        return
     t = Table(f"S-BENU streaming engines on n={args.n} m={args.edges} "
               f"({args.update_batch} updates/step)",
               ["pattern", "step", "dR+", "dR-", "interp s", "jit s",
@@ -181,7 +267,7 @@ def main() -> None:
                       seed=args.seed, chunk=args.chunk,
                       run_ref=not args.no_ref, table=t)
     t.show()
-    emit(t)
+    emit(t, args.json)
     if not args.no_ref:
         print(f"\nsteady-state speedup (steps >= 2): {sp:.1f}x")
 

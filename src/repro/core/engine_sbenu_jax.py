@@ -26,11 +26,19 @@ Flagged sets are value/sign row pairs: values follow the padded-set
 convention (sentinel holes, ascending), signs are +1/-1 with 0 at holes.
 Every shape is static, so the program jits; the unified Executor driver
 (core/executor.py, ``sbenu-jax`` backend) owns chunking and overflow.
+
+The instruction loop is split from the data source: the typed-DBQ selector
+is a pluggable ``fetch(ids, type, direction, op, opsign)`` built by
+:func:`make_typed_fetch` from three gather callbacks, so the same loop runs
+against a resident :class:`DeviceSnapshot` (this module) or against
+mesh-sharded blocks served by request/response collectives
+(core/engine_sbenu_dist.py).
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -162,10 +170,29 @@ def sbenu_level_fanouts(plan: Plan) -> List[bool]:
 
 def _resolve_intersect_impl(impl: str) -> str:
     """``auto`` -> Pallas on TPU, binary-search elsewhere (delta rows are
-    kept ascending precisely so the O(D log D) path applies)."""
+    kept ascending precisely so the O(D log D) path applies).
+
+    ``REPRO_INTERSECT_IMPL`` overrides the ``auto`` choice only (an
+    explicit argument always wins); the value ``pallas-interpret`` selects
+    the Pallas kernel in interpret mode, which is how CI exercises the
+    TPU INT path on the CPU container.
+    """
+    if impl == "auto":
+        impl = os.environ.get("REPRO_INTERSECT_IMPL", "").strip() or "auto"
+    if impl in ("pallas-interpret", "interpret"):
+        return "interpret"
     if impl != "auto":
         return impl
     return "pallas" if jax.default_backend() == "tpu" else "binary"
+
+
+def _resort_fn(binary: bool) -> Callable[[jax.Array], jax.Array]:
+    """The binary-search intersect needs b-side rows fully ascending with
+    tail holes; resort() restores that invariant after masking/filtering
+    (identity for every other impl — they accept in-place holes)."""
+    if binary:
+        return lambda rows: jnp.sort(rows, axis=-1)
+    return lambda rows: rows
 
 
 # --------------------------------------------------------------------------
@@ -192,18 +219,75 @@ jax.tree_util.register_dataclass(
 
 FlaggedRows = Tuple[jax.Array, jax.Array]       # (values, signs)
 
+#: fetch(ids, type, direction, op, opsign) -> rows | (values, signs)
+TypedFetch = Callable[..., Union[jax.Array, FlaggedRows]]
 
-def build_sbenu_enumerator(plan: Plan, sentinel: int, caps: Sequence[int],
-                           collect_matches: bool = False,
-                           intersect_impl: str = "auto",
-                           compaction: str = "cumsum"
-                           ) -> Callable[..., SBenuEnumResult]:
-    """Compile an incremental plan into a jittable function of
-    ``(snap: DeviceSnapshot, starts int32[B], starts_valid bool[B])``.
 
-    ``caps[i]`` is the child-frontier capacity of the i-th expansion level
-    (DENU or ENU). Overflow reporting follows the static engine: a result
-    with ``overflow > 0`` must be discarded and re-chunked by the driver.
+def make_typed_fetch(sentinel: int,
+                     resort: Callable[[jax.Array], jax.Array],
+                     gather_prev: Callable[[str, jax.Array], jax.Array],
+                     gather_cur: Callable[[str, jax.Array], jax.Array],
+                     gather_delta: Callable[[str, jax.Array], FlaggedRows],
+                     gather_opsel: Optional[Callable] = None) -> TypedFetch:
+    """The (type, direction, op) DBQ selector of §5.3.1 over three row
+    gathers.
+
+    ``gather_prev``/``gather_cur`` serve G'_{t-1}/G'_t rows for one
+    direction; ``gather_delta`` serves the flagged delta (values, signs)
+    pair. The lane-wise derivations (``unaltered`` masking, sign
+    filtering, the per-row snapshot select) are shared by every engine —
+    only the gathers differ (resident block indexing here, request/
+    response collectives in the sharded engine). ``gather_opsel`` is an
+    optional fast path for the op-dependent select (the resident engine's
+    single offset gather over stacked prev/cur); without it the select is
+    two gathers + a row-wise ``where``.
+    """
+
+    def fetch(ids: jax.Array, ty: str, direction: str, op,
+              opsign: Optional[jax.Array]) -> Union[jax.Array, FlaggedRows]:
+        if ty == "either":
+            if op == "+":
+                return gather_cur(direction, ids)
+            if op == "-":
+                return gather_prev(direction, ids)
+            # per-row snapshot selector bound by the Delta-ENU
+            if gather_opsel is not None:
+                return gather_opsel(direction, ids, opsign)
+            pv = gather_prev(direction, ids)
+            cv = gather_cur(direction, ids)
+            return jnp.where((opsign > 0)[:, None], cv, pv)
+        if ty == "unaltered":
+            # prev minus deleted: mask prev entries that appear with a
+            # '-' flag in the delta row (lane-wise membership probe)
+            rows = gather_prev(direction, ids)
+            dvals, dsigns = gather_delta(direction, ids)
+            deleted = jnp.where(dsigns < 0, dvals, sentinel)
+            hit = jnp.any(rows[:, :, None] == deleted[:, None, :], axis=2)
+            return resort(jnp.where(hit, sentinel, rows))
+        if ty == "delta":
+            dvals, dsigns = gather_delta(direction, ids)
+            if op == "*":
+                return dvals, dsigns
+            want = (dsigns > 0) if op == "+" else (dsigns < 0) \
+                if op == "-" else (dsigns * opsign[:, None] > 0)
+            return resort(jnp.where(want, dvals, sentinel))
+        raise ValueError(ty)
+
+    return fetch
+
+
+def build_sbenu_instr_runner(plan: Plan, sentinel: int, caps: Sequence[int],
+                             collect_matches: bool = False,
+                             intersect_impl: str = "auto",
+                             compaction: str = "cumsum",
+                             post_expand: Optional[Callable] = None
+                             ) -> Callable[..., SBenuEnumResult]:
+    """The incremental instruction loop over a pluggable typed fetch.
+
+    Returns ``run_instrs(fetch, starts, starts_valid)`` where ``fetch`` is
+    a :func:`make_typed_fetch` selector. ``post_expand(env, valid)`` (if
+    given) runs after every DENU/ENU expansion — the sharded engine's
+    frontier rebalancer hook, identical to the static engine's.
     """
     check_sbenu_jit_supported(plan)
     live = _sbenu_liveness(plan)
@@ -212,68 +296,13 @@ def build_sbenu_enumerator(plan: Plan, sentinel: int, caps: Sequence[int],
         raise ValueError(f"need {n_lv} caps, got {len(caps)}")
 
     impl = _resolve_intersect_impl(intersect_impl)
-    # the binary-search intersect needs b-side rows fully ascending with
-    # tail holes; resort() restores that invariant after masking/filtering
     binary = impl == "binary"
     isect = functools.partial(kops.intersect_padded, sentinel=sentinel,
                               impl=impl)
+    resort = _resort_fn(binary)
 
-    def resort(rows: jax.Array) -> jax.Array:
-        return jnp.sort(rows, axis=-1) if binary else rows
-
-    def run(snap: DeviceSnapshot, starts: jax.Array,
-            starts_valid: jax.Array) -> SBenuEnumResult:
-        n = snap.n
-        assert n == sentinel, "snapshot/plan sentinel mismatch"
-        # prev/cur stacked per direction: the per-row snapshot selector
-        # becomes a single offset gather instead of two gathers + where
-        # (XLA CSEs the concats across repeated DBQs and fused plans)
-        stacked = {"out": jnp.concatenate([snap.prev_out, snap.cur_out],
-                                          axis=0),
-                   "in": jnp.concatenate([snap.prev_in, snap.cur_in],
-                                         axis=0)}
-
-        def gather(block: jax.Array, ids: jax.Array) -> jax.Array:
-            return block[jnp.clip(ids, 0, n)]
-
-        def delta_rows(direction: str, ids: jax.Array) -> FlaggedRows:
-            if direction == "out":
-                return (gather(snap.delta_out, ids),
-                        gather(snap.delta_out_sign, ids))
-            return gather(snap.delta_in, ids), gather(snap.delta_in_sign, ids)
-
-        def fetch(ids: jax.Array, ty: str, direction: str, op,
-                  opsign: Optional[jax.Array]
-                  ) -> Union[jax.Array, FlaggedRows]:
-            """The (type, direction, op) DBQ selector of §5.3.1."""
-            prev = snap.prev_out if direction == "out" else snap.prev_in
-            cur = snap.cur_out if direction == "out" else snap.cur_in
-            if ty == "either":
-                if op == "+":
-                    return gather(cur, ids)
-                if op == "-":
-                    return gather(prev, ids)
-                # per-row snapshot selector bound by the Delta-ENU
-                side = jnp.where(opsign > 0, n + 1, 0)
-                return stacked[direction][jnp.clip(ids, 0, n) + side]
-            if ty == "unaltered":
-                # prev minus deleted: mask prev entries that appear with a
-                # '-' flag in the delta row (lane-wise membership probe)
-                rows = gather(prev, ids)
-                dvals, dsigns = delta_rows(direction, ids)
-                deleted = jnp.where(dsigns < 0, dvals, sentinel)
-                hit = jnp.any(rows[:, :, None] == deleted[:, None, :],
-                              axis=2)
-                return resort(jnp.where(hit, sentinel, rows))
-            if ty == "delta":
-                dvals, dsigns = delta_rows(direction, ids)
-                if op == "*":
-                    return dvals, dsigns
-                want = (dsigns > 0) if op == "+" else (dsigns < 0) \
-                    if op == "-" else (dsigns * opsign[:, None] > 0)
-                return resort(jnp.where(want, dvals, sentinel))
-            raise ValueError(ty)
-
+    def run_instrs(fetch: TypedFetch, starts: jax.Array,
+                   starts_valid: jax.Array) -> SBenuEnumResult:
         env: Dict[Var, object] = {}
         valid = starts_valid
         cdt = _count_dtype()
@@ -329,6 +358,8 @@ def build_sbenu_enumerator(plan: Plan, sentinel: int, caps: Sequence[int],
                     extra_cols=extra)
                 env = plain_env
                 overflow = overflow + ov.astype(cdt)
+                if post_expand is not None:
+                    env, valid = post_expand(env, valid)
                 level_sizes.append(jnp.sum(valid))
                 lv += 1
             elif ins.op == INS:
@@ -352,6 +383,65 @@ def build_sbenu_enumerator(plan: Plan, sentinel: int, caps: Sequence[int],
                                level_sizes=tuple(level_sizes),
                                matches=matches, match_ops=match_ops,
                                matches_valid=matches_valid)
+
+    return run_instrs
+
+
+def build_sbenu_enumerator(plan: Plan, sentinel: int, caps: Sequence[int],
+                           collect_matches: bool = False,
+                           intersect_impl: str = "auto",
+                           compaction: str = "cumsum"
+                           ) -> Callable[..., SBenuEnumResult]:
+    """Compile an incremental plan into a jittable function of
+    ``(snap: DeviceSnapshot, starts int32[B], starts_valid bool[B])``.
+
+    ``caps[i]`` is the child-frontier capacity of the i-th expansion level
+    (DENU or ENU). Overflow reporting follows the static engine: a result
+    with ``overflow > 0`` must be discarded and re-chunked by the driver.
+    """
+    run_instrs = build_sbenu_instr_runner(
+        plan, sentinel, caps, collect_matches=collect_matches,
+        intersect_impl=intersect_impl, compaction=compaction)
+    resort = _resort_fn(_resolve_intersect_impl(intersect_impl) == "binary")
+
+    def run(snap: DeviceSnapshot, starts: jax.Array,
+            starts_valid: jax.Array) -> SBenuEnumResult:
+        n = snap.n
+        assert n == sentinel, "snapshot/plan sentinel mismatch"
+        rows_total = snap.prev_out.shape[0]      # n + 1, or mesh-padded
+        # prev/cur stacked per direction: the per-row snapshot selector
+        # becomes a single offset gather instead of two gathers + where
+        # (XLA CSEs the concats across repeated DBQs and fused plans)
+        stacked = {"out": jnp.concatenate([snap.prev_out, snap.cur_out],
+                                          axis=0),
+                   "in": jnp.concatenate([snap.prev_in, snap.cur_in],
+                                         axis=0)}
+        prev = {"out": snap.prev_out, "in": snap.prev_in}
+        cur = {"out": snap.cur_out, "in": snap.cur_in}
+        delta = {"out": (snap.delta_out, snap.delta_out_sign),
+                 "in": (snap.delta_in, snap.delta_in_sign)}
+
+        def gather(block: jax.Array, ids: jax.Array) -> jax.Array:
+            return block[jnp.clip(ids, 0, n)]
+
+        def gather_prev(direction: str, ids: jax.Array) -> jax.Array:
+            return gather(prev[direction], ids)
+
+        def gather_cur(direction: str, ids: jax.Array) -> jax.Array:
+            return gather(cur[direction], ids)
+
+        def gather_delta(direction: str, ids: jax.Array) -> FlaggedRows:
+            dvals, dsigns = delta[direction]
+            return gather(dvals, ids), gather(dsigns, ids)
+
+        def gather_opsel(direction: str, ids: jax.Array,
+                         opsign: jax.Array) -> jax.Array:
+            side = jnp.where(opsign > 0, rows_total, 0)
+            return stacked[direction][jnp.clip(ids, 0, n) + side]
+
+        fetch = make_typed_fetch(sentinel, resort, gather_prev, gather_cur,
+                                 gather_delta, gather_opsel)
+        return run_instrs(fetch, starts, starts_valid)
 
     return run
 

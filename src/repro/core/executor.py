@@ -28,6 +28,9 @@ Backends::
                bounded device cache + async prefetch (core/engine_ooc.py)
     sbenu      continuous/delta enumeration          (core/sbenu.py)
     sbenu-jax  vectorized continuous enumeration     (core/engine_sbenu_jax.py)
+    sbenu-dist shard_map SPMD continuous enumeration
+               over the mesh-sharded six-block
+               snapshot                              (core/engine_sbenu_dist.py)
 
 Use :func:`make_executor` (or instantiate a backend directly) and call
 :meth:`Executor.run`; all engines route through here, so every launcher,
@@ -199,6 +202,11 @@ class ExecutorBackend(ABC):
     name: str = "?"
     #: start-batch shapes must be multiples of this (mesh width for SPMD)
     granularity: int = 1
+    #: frontier capacities must be multiples of this: the driver rounds
+    #: every caps tuple it hands out (initial and escalated) up to it.
+    #: SPMD backends set the mesh size — their rebalancer stripes a local
+    #: frontier round-robin over the axis, which needs cap % S == 0
+    cap_multiple: int = 1
     #: whether the driver may re-chunk this backend's batches
     splittable: bool = True
 
@@ -259,7 +267,16 @@ def drive(backend: ExecutorBackend, plan: Any, source: Any,
     backend.prepare(plan, source, config)
     stats = ExecStats()
     all_matches: List[np.ndarray] = []
-    caps0 = tuple(backend.initial_caps(config))
+    # every caps tuple the driver hands out is rounded up to the backend's
+    # cap_multiple (read after prepare(): SPMD backends learn their mesh
+    # size there). This is what keeps user-supplied or degree-derived odd
+    # capacities from tripping the rebalancer's cap % mesh-size assert.
+    mult = max(int(getattr(backend, "cap_multiple", 1)), 1)
+
+    def round_caps(caps: Sequence[int]) -> Tuple[int, ...]:
+        return tuple(ceil_div(int(c), mult) * mult for c in caps)
+
+    caps0 = round_caps(backend.initial_caps(config))
     sentinel = getattr(backend, "sentinel", 0)
     for ids, valid in backend.start_batches(config):
         for uni in backend.universe_chunks(config):
@@ -297,7 +314,8 @@ def drive(backend: ExecutorBackend, plan: Any, source: Any,
                         f"[{backend.name}] chunk overflowed after "
                         f"{tries} escalations (caps={caps})")
                 stats.chunks_retried += 1
-                new_caps = backend.grow_caps(caps) if res.overflow else caps
+                new_caps = round_caps(backend.grow_caps(caps)) \
+                    if res.overflow else caps
                 work.append((cids, cvalid, new_caps, tries + 1))
     if config.collect_matches:
         stats.matches = (np.concatenate(all_matches, axis=0) if all_matches
@@ -486,6 +504,7 @@ class DistBackend(ExecutorBackend):
         self.mesh = mesh
         self.S = mesh.devices.size
         self.granularity = self.S
+        self.cap_multiple = self.S       # rebalancer stripes (driver rounds)
         shards_np, hot_np, spec = build_row_shards(source, self.S,
                                                    hot=self._hot)
         self.spec = spec
@@ -905,6 +924,211 @@ class SBenuJaxBackend(ExecutorBackend):
 
 
 # --------------------------------------------------------------------------
+# Backend: distributed S-BENU (shard_map SPMD over the sharded six-block
+# snapshot)
+# --------------------------------------------------------------------------
+
+
+class SBenuDistBackend(ExecutorBackend):
+    """Mesh-wide SPMD delta-frontier engine (core/engine_sbenu_dist.py).
+
+    The six-block snapshot is row-block partitioned over the enumeration
+    mesh and stays resident across time steps
+    (:class:`~repro.graph.dynamic.ShardedDeviceSnapshotStore`); typed DBQs
+    are request/response all_to_alls against the owning shard with the
+    top-``hot`` rows replicated; ΔR_t^± counts (and collected match rows)
+    come back per shard and are reduced here. Start batches shard evenly
+    (``granularity = S``) and frontier capacities are per *shard*, kept
+    divisible by the mesh size through the driver's ``cap_multiple``
+    contract (required by the opt-in rebalancer's stripe exchange).
+    """
+
+    name = "sbenu-dist"
+    splittable = True
+
+    def __init__(self, pattern: Optional[Pattern] = None,
+                 collect: str = "matches", lane: int = 8,
+                 d_min: int = 0, delta_d_min: int = 0,
+                 compaction: str = "cumsum",
+                 mesh=None, axis: str = "shard", hot: int = 0,
+                 rebalance: bool = False, req_cap: Optional[int] = None):
+        self._pattern = pattern          # unused; parity with SBenuBackend
+        self._collect_mode = collect
+        self._lane = lane
+        self._d_min = d_min
+        self._delta_d_min = delta_d_min
+        self._compaction = compaction
+        self._mesh = mesh
+        self._axis = axis
+        self._hot = hot
+        self._rebalance = rebalance
+        self._req_cap0 = req_cap
+        # compiled shard_map steps outlive prepare(): one compile per
+        # stream as long as snapshot widths stay pinned (d_min/delta_d_min)
+        self._runners: Dict[Tuple, Callable] = {}
+
+    def prepare(self, plans: Sequence[Plan], source,
+                config: ExecutorConfig) -> None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..graph.dynamic import ShardedDeviceSnapshotStore
+        from .engine_dist import enumeration_mesh
+        from .engine_sbenu_jax import plan_level_count, sbenu_level_fanouts
+        self.plans = list(plans)
+        plan_ids = tuple(id(p) for p in self.plans)
+        if getattr(self, "_cached_plan_ids", None) != plan_ids:
+            self._runners.clear()
+            self._cached_plan_ids = plan_ids
+        mesh = self._mesh if self._mesh is not None else enumeration_mesh(
+            self._axis)
+        self.mesh = mesh
+        self.S = int(mesh.devices.size)
+        self.granularity = self.S
+        self.cap_multiple = self.S
+        self.store = source
+        self.sentinel = source.n
+        self._starts = np.asarray(sorted(source.start_vertices()), np.int32)
+        dstore = ShardedDeviceSnapshotStore.for_store(
+            source, mesh, axis=self._axis, lane=self._lane,
+            d_min=self._d_min, delta_d_min=self._delta_d_min,
+            hot=self._hot)
+        self.dstore = dstore
+        blocks, hot_blocks, self.spec = dstore.step_sharded()
+        from .engine_sbenu_dist import BLOCK_ORDER
+        self._block_args = tuple(blocks[k] for k in BLOCK_ORDER) + \
+            tuple(hot_blocks[k] for k in BLOCK_ORDER)
+        self._widths = tuple(int(blocks[k].shape[1]) for k in BLOCK_ORDER)
+        # global batch: a multiple of S so shard_map splits starts evenly
+        self._B = ceil_div(max(config.batch, self.S), self.S) * self.S
+        w = self._B // self.S
+        # per-shard Delta-ENU bound: each start emits exactly its delta
+        # row, and a shard owns a contiguous w-slice of the chunk — the
+        # worst slice's delta-edge total bounds the local first level
+        degs = np.array([len(source.delta_adj_out(int(v)))
+                         for v in self._starts], np.int64)
+        denu_cap = w
+        for s0 in range(0, len(degs), self._B):
+            chunk = degs[s0:s0 + self._B]
+            for k in range(self.S):
+                denu_cap = max(denu_cap, int(chunk[k * w:(k + 1) * w].sum()))
+        denu_cap = max(denu_cap, 8)
+        denu_cap = 1 << (denu_cap - 1).bit_length()
+        avg_deg = max(1, round(source.prev.m / max(source.n, 1)))
+        # one caps tuple for the whole chunk: per-plan slices, concatenated
+        # (same policy as the single-device backend; driver rounds each
+        # entry up to cap_multiple = S)
+        self._offsets: List[Tuple[int, int]] = []
+        caps: List[int] = []
+        for plan in self.plans:
+            n_lv = plan_level_count(plan)
+            if config.caps is not None:
+                c = list(config.caps)[:n_lv]
+                c += [c[-1]] * (n_lv - len(c))
+            else:
+                c, cur = [], denu_cap
+                for fans in sbenu_level_fanouts(plan):
+                    if fans:
+                        cur = min(cur * 2 * avg_deg, 1 << 22)
+                        cur = 1 << (cur - 1).bit_length()
+                    c.append(cur)
+            self._offsets.append((len(caps), len(caps) + len(c)))
+            caps.extend(c)
+        self._caps0 = tuple(caps)
+        # per-peer request budget: ~2x the worst per-owner distinct-id load
+        # of a frontier level, bounded so the [S, R, D] exchange buffers
+        # stay modest — a heavy level that still drops escalates (2x) and
+        # the chunk retries, which is exact
+        self.req_cap = self._req_cap0 if self._req_cap0 is not None else \
+            max(64, min(2 * max(self._caps0) // self.S, 8192))
+        self._collect = config.collect_matches or \
+            self._collect_mode == "matches"
+        self._intersect = config.intersect_impl
+        self._id_sharding = NamedSharding(mesh, P(self._axis))
+        self._plus: List[Tuple[int, ...]] = []
+        self._minus: List[Tuple[int, ...]] = []
+        self._count_plus = 0
+        self._count_minus = 0
+        self._per_shard = np.zeros(self.S, np.int64)
+        self._level_acc: Optional[np.ndarray] = None
+        self._cold = 0
+
+    def _n_starts(self) -> int:
+        return self._starts.shape[0]
+
+    def start_batches(self, config: ExecutorConfig):
+        n, B = self._starts.shape[0], self._B
+        for s0 in range(0, n, B):
+            chunk = self._starts[s0:s0 + B]
+            ids = np.full(B, self.sentinel, np.int32)
+            ids[:chunk.shape[0]] = chunk
+            valid = np.zeros(B, bool)
+            valid[:chunk.shape[0]] = True
+            yield ids, valid
+
+    def initial_caps(self, config: ExecutorConfig) -> Tuple[int, ...]:
+        return self._caps0
+
+    def escalate_requests(self) -> None:
+        self.req_cap *= 2
+
+    def _runner(self, caps: Tuple[int, ...]) -> Callable:
+        key = (self._cached_plan_ids, caps, self.req_cap, self._widths)
+        if key not in self._runners:
+            from .engine_sbenu_dist import build_sbenu_dist_step
+            caps_list = [tuple(caps[lo:hi]) for lo, hi in self._offsets]
+            self._runners[key] = build_sbenu_dist_step(
+                self.plans, self.sentinel, self.spec, self.mesh,
+                self._axis, caps_list, self.req_cap,
+                rebalance=self._rebalance, collect_matches=self._collect,
+                intersect_impl=self._intersect,
+                compaction=self._compaction)
+        return self._runners[key]
+
+    def run_chunk(self, ids, valid, universe_chunk, caps) -> ChunkResult:
+        import jax
+        import jax.numpy as jnp
+        jids = jax.device_put(jnp.asarray(ids), self._id_sharding)
+        jvalid = jax.device_put(jnp.asarray(valid), self._id_sharding)
+        out = self._runner(tuple(caps))(*self._block_args, jids, jvalid)
+        cp, cm, ov, cold, drops, levels = out[:6]
+        ov = int(np.sum(np.asarray(ov)))
+        dr = int(np.sum(np.asarray(drops)))
+        if ov or dr:
+            # discard the whole mesh-wide chunk; the driver re-splits
+            # (granularity S) or escalates caps / request budgets
+            return ChunkResult(count=0, overflow=ov, drops=dr)
+        cps = np.asarray(cp, np.int64)
+        cms = np.asarray(cm, np.int64)
+        self._per_shard += cps + cms
+        self._cold += int(np.sum(np.asarray(cold)))
+        lv = np.asarray(levels)
+        self._level_acc = (lv if self._level_acc is None
+                           else self._level_acc + lv)
+        if self._collect:
+            m, mo, mv = out[6:]
+            mv = np.asarray(mv)
+            rows = np.asarray(m)[mv]
+            ops = np.asarray(mo)[mv]
+            for row, o in zip(rows, ops):
+                (self._plus if o > 0 else self._minus).append(
+                    tuple(int(x) for x in row))
+        self._count_plus += int(cps.sum())
+        self._count_minus += int(cms.sum())
+        return ChunkResult(count=int(cps.sum() + cms.sum()))
+
+    def finalize(self, stats: ExecStats) -> None:
+        from .sbenu import SBenuCounters
+        ctr = SBenuCounters(matches_plus=self._count_plus,
+                            matches_minus=self._count_minus)
+        stats.extras.update(
+            delta_plus=set(self._plus), delta_minus=set(self._minus),
+            counters=ctr, per_shard_counts=self._per_shard,
+            per_shard_level_sizes=(
+                self._level_acc if self._level_acc is not None
+                else np.zeros((0, self.S))),
+            cold_rows_fetched=self._cold)
+
+
+# --------------------------------------------------------------------------
 # Factory + dry-run hook
 # --------------------------------------------------------------------------
 
@@ -916,6 +1140,7 @@ BACKENDS = {
     "oocache": OocBackend,
     "sbenu": SBenuBackend,
     "sbenu-jax": SBenuJaxBackend,
+    "sbenu-dist": SBenuDistBackend,
 }
 
 

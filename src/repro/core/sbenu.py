@@ -492,7 +492,9 @@ def run_timestep(pattern: Pattern, plans: Sequence[Plan],
     The enumeration sub-phase routes through the unified Executor API
     (core/executor.py). ``engine`` picks the backend: ``"ref"`` (alias
     ``"sbenu"``) interprets every task in Python; ``"sbenu-jax"`` runs the
-    vectorized delta-frontier engine over the six-block device snapshot.
+    vectorized delta-frontier engine over the six-block device snapshot;
+    ``"sbenu-dist"`` runs the shard_map SPMD variant over the mesh-sharded
+    snapshot.
     Either way the shared driver chunks the touched-vertex start set and
     splits overloaded chunks (θ delta-slicing for the interpreter, adaptive
     re-chunking for the JIT engine).
@@ -501,8 +503,8 @@ def run_timestep(pattern: Pattern, plans: Sequence[Plan],
     its compiled runners across the whole stream instead of recompiling
     every step).
     """
-    from .executor import (ExecutorConfig, SBenuBackend, SBenuJaxBackend,
-                           drive)
+    from .executor import (ExecutorConfig, SBenuBackend, SBenuDistBackend,
+                           SBenuJaxBackend, drive)
     store.begin_step(batch)
     if backend is None:
         if engine in ("ref", "sbenu"):
@@ -511,6 +513,9 @@ def run_timestep(pattern: Pattern, plans: Sequence[Plan],
         elif engine == "sbenu-jax":
             backend = SBenuJaxBackend(pattern, collect=collect,
                                       **backend_kwargs)
+        elif engine == "sbenu-dist":
+            backend = SBenuDistBackend(pattern, collect=collect,
+                                       **backend_kwargs)
         else:
             raise ValueError(f"unknown S-BENU engine {engine!r}")
     st = drive(backend, list(plans), store,

@@ -78,13 +78,19 @@ def build_row_shards(graph: Graph, n_shards: int, hot: int = 0,
     return shards, hot_rows, spec
 
 
-def make_distributed_fetch(spec: RowStoreSpec, axis: str, req_cap: int):
+def make_distributed_fetch(spec, axis: str, req_cap: int):
     """Build ``fetch(ids, local_shard, hot_rows) -> (rows, n_cold, drops)``
     for use *inside* shard_map over mesh axis ``axis``.
 
     ``req_cap`` (R) is the static per-peer request budget. ``drops`` counts
     requests beyond R (the driver treats drops > 0 like frontier overflow
     and retries with a smaller start batch / larger R).
+
+    ``spec`` is duck-typed (``n`` / ``n_shards`` / ``rows_per_shard`` /
+    ``hot``): the row width comes from ``local_shard`` at call time, so one
+    fetch serves stores of any width sharing a layout — the streaming
+    engine reuses it for all six snapshot blocks
+    (:class:`~repro.graph.dynamic.SnapshotShardSpec`).
     """
     S = spec.n_shards
     rps = spec.rows_per_shard
@@ -123,7 +129,7 @@ def make_distributed_fetch(spec: RowStoreSpec, axis: str, req_cap: int):
         # -- route responses back (same slots)
         resp = jax.lax.all_to_all(lrows, axis, split_axis=0, concat_axis=0,
                                   tiled=False)           # [S, R, D]
-        flat = resp.reshape(S * req_cap, spec.d)
+        flat = resp.reshape(S * req_cap, resp.shape[-1])
         got_u = flat[jnp.clip(owner * req_cap + slot, 0, S * req_cap - 1)]
         got_u = jnp.where(ok[:, None], got_u, sent)      # [B, D] unique rows
         out = got_u[inv]                                 # un-dedup

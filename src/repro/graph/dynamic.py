@@ -335,6 +335,10 @@ class DeviceSnapshotStore:
         self.params = (lane, d_min, delta_d_min, storage)
         self.lane, self.d_min, self.delta_d_min = lane, d_min, delta_d_min
         self._jnp = jnp
+        # device blocks carry this many rows: n real + 1 sentinel (the
+        # mesh-sharded subclass pads further so shards divide evenly; rows
+        # beyond n are all-sentinel and never gathered — clip(ids, 0, n))
+        self._rows_total = store.n + 1
         # di -> jax [N+1, D] (device mode) | HostRowStore (host mode)
         self._prev: Optional[Dict[str, object]] = None
         self._d: Dict[str, int] = {}
@@ -361,8 +365,14 @@ class DeviceSnapshotStore:
                               axis=1)[:, :d]        # fits: width guard
             return prev.at[tids].set(merged)
 
+        self._derive_fn = derive
         self._derive = jax.jit(derive)
         store._mirrors.append(self)
+
+    def _place(self, arr: np.ndarray):
+        """Device placement of one block (subclass hook: the mesh-sharded
+        store device_puts with a row-partitioned NamedSharding here)."""
+        return self._jnp.asarray(arr)
 
     @classmethod
     def for_store(cls, store: SnapshotStore, lane: int = 8,
@@ -401,11 +411,11 @@ class DeviceSnapshotStore:
                 self._prev[di] = HostRowStore.from_adj(
                     lambda v: sorted(sets[v]), n, d)
             else:
-                rows = np.full((n + 1, d), n, np.int32)
+                rows = np.full((self._rows_total, d), n, np.int32)
                 for v, s in enumerate(sets):
                     a = sorted(s)
                     rows[v, :len(a)] = a
-                self._prev[di] = jnp.asarray(rows)
+                self._prev[di] = self._place(rows)
             self._d[di] = d
 
     def _delta_buffers(self, delta: Dict[int, Dict[int, str]]
@@ -417,8 +427,8 @@ class DeviceSnapshotStore:
                  for v, ops in delta.items() for w, op in ops.items()]
         if not items:
             dd = self._round(self.delta_d_min)
-            return (np.full((n + 1, dd), n, np.int32),
-                    np.zeros((n + 1, dd), np.int32), 0)
+            return (np.full((self._rows_total, dd), n, np.int32),
+                    np.zeros((self._rows_total, dd), np.int32), 0)
         arr = np.asarray(items, np.int64)
         arr = arr[np.lexsort((arr[:, 1], arr[:, 0]))]
         src = arr[:, 0]
@@ -426,8 +436,8 @@ class DeviceSnapshotStore:
         counts = np.diff(np.r_[gstart, len(src)])
         pos = np.arange(len(src)) - np.repeat(gstart, counts)
         dd = self._round(max(int(counts.max()), self.delta_d_min))
-        vals = np.full((n + 1, dd), n, np.int32)
-        signs = np.zeros((n + 1, dd), np.int32)
+        vals = np.full((self._rows_total, dd), n, np.int32)
+        signs = np.zeros((self._rows_total, dd), np.int32)
         vals[src, pos] = arr[:, 1]
         signs[src, pos] = arr[:, 2]
         return vals, signs, int(counts.max())
@@ -511,7 +521,7 @@ class DeviceSnapshotStore:
         blocks: Dict[str, object] = {}
         for di, delta in (("out", st.delta_out), ("in", st.delta_in)):
             vals, signs, _ = self._delta_buffers(delta)
-            jvals, jsigns = jnp.asarray(vals), jnp.asarray(signs)
+            jvals, jsigns = self._place(vals), self._place(signs)
             # touched ids, sentinel-padded to a power of two so steps with
             # similar churn share one compiled derive shape
             touched = sorted(delta)
@@ -597,6 +607,120 @@ class DeviceSnapshotStore:
         return SnapshotRowView(
             self, direction,
             {int(v): merged[i] for i, v in enumerate(tids)})
+
+
+@dataclass(frozen=True)
+class SnapshotShardSpec:
+    """Static layout of a mesh-sharded six-block snapshot.
+
+    Duck-compatible with the ``distributed/rowstore.py`` fetch builder
+    (``n`` / ``n_shards`` / ``rows_per_shard`` / ``hot``): every block is
+    block-partitioned by row over the enumeration axis (owner of row v =
+    ``v // rows_per_shard``), widths vary per block and are read from the
+    arrays at trace time. The ``hot`` highest ids (``>= n - hot``) are
+    additionally replicated on every device and served locally. Note:
+    unlike the static path, streaming graphs are **not** degree-relabeled
+    at load, so the replicated set is an id range, only a hub set if the
+    stream's vertex numbering makes it one — relabel the initial graph
+    (and stream) by ascending degree to get the static engine's anti-skew
+    behavior.
+    """
+
+    n: int                 # real vertices; sentinel value
+    n_shards: int
+    rows_per_shard: int    # ceil((n+1) / n_shards); blocks carry S*rps rows
+    hot: int = 0
+
+
+class ShardedDeviceSnapshotStore(DeviceSnapshotStore):
+    """Mesh-sharded resident dual-snapshot store (the distributed
+    streaming substrate, core/engine_sbenu_dist.py).
+
+    Same per-step contract as the device-mode base class — resident
+    ``prev`` blocks advanced incrementally, ``cur`` derived from
+    ``prev`` + delta for the touched rows only, promotion by buffer
+    adoption at ``end_step`` — but every block is laid out with
+    ``S * rows_per_shard`` rows and device_put with a row-partitioned
+    ``NamedSharding`` over the enumeration mesh, so the dual snapshot's
+    HBM footprint is split S ways and the per-step derive runs as one
+    GSPMD program over the sharded buffers.
+
+    :meth:`step_sharded` additionally materializes the per-direction
+    **joint delta block** (values ++ signs, one fetch per delta DBQ) and
+    the replicated hot-row slices the SPMD engine serves locally.
+
+    Snapshots from this store feed the ``shard_map`` engine; they are
+    *not* interchangeable with the single-device engine's snapshots (row
+    counts differ from ``n + 1`` — gathers still work, but there is no
+    point paying the mesh layout without the mesh).
+    """
+
+    def __init__(self, store: SnapshotStore, mesh, axis: str = "shard",
+                 lane: int = 8, d_min: int = 0, delta_d_min: int = 0,
+                 hot: int = 0):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+        self.mesh, self.axis = mesh, axis
+        self.S = int(mesh.devices.size)
+        super().__init__(store, lane=lane, d_min=d_min,
+                         delta_d_min=delta_d_min, storage="device")
+        self.rows_per_shard = -(-(store.n + 1) // self.S)
+        self._rows_total = self.S * self.rows_per_shard
+        self.hot = min(int(hot), store.n)
+        self._jax = jax
+        self._sh2d = NamedSharding(mesh, PartitionSpec(axis, None))
+        self._rep2d = NamedSharding(mesh, PartitionSpec(None, None))
+        # re-jit the shared derive with the row-partitioned output layout
+        self._derive = jax.jit(self._derive_fn, out_shardings=self._sh2d)
+        self.params = (lane, d_min, delta_d_min, "sharded", self.S,
+                       axis, self.hot)
+
+    @classmethod
+    def for_store(cls, store: SnapshotStore, mesh, axis: str = "shard",
+                  lane: int = 8, d_min: int = 0, delta_d_min: int = 0,
+                  hot: int = 0) -> "ShardedDeviceSnapshotStore":
+        """Reuse an existing sharded mirror with the same layout + mesh."""
+        key = (lane, d_min, delta_d_min, "sharded", int(mesh.devices.size),
+               axis, min(int(hot), store.n))
+        for m in store._mirrors:
+            if isinstance(m, cls) and m.params == key and m.mesh is mesh:
+                return m
+        return cls(store, mesh, axis=axis, lane=lane, d_min=d_min,
+                   delta_d_min=delta_d_min, hot=hot)
+
+    def _place(self, arr: np.ndarray):
+        return self._jax.device_put(np.asarray(arr), self._sh2d)
+
+    def step_sharded(self) -> Tuple[Dict[str, object], Dict[str, object],
+                                    SnapshotShardSpec]:
+        """``(blocks, hot_blocks, spec)`` for the begun step.
+
+        ``blocks``: six row-partitioned device arrays — ``prev_/cur_{out,
+        in}`` plus ``delta_joint_{out,in}`` (values ++ signs concatenated
+        along the width, so one request/response exchange serves a whole
+        flagged delta row). ``hot_blocks``: the replicated ``[hot+1, W]``
+        top-id slices of each (the ``+1`` is the sentinel row, matching
+        ``distributed/rowstore.py``).
+        """
+        jnp = self._jnp
+        snap = self.step_snapshot()
+        blocks: Dict[str, object] = {
+            "prev_out": snap.prev_out, "cur_out": snap.cur_out,
+            "prev_in": snap.prev_in, "cur_in": snap.cur_in,
+            "delta_joint_out": self._jax.device_put(
+                jnp.concatenate([snap.delta_out, snap.delta_out_sign],
+                                axis=1), self._sh2d),
+            "delta_joint_in": self._jax.device_put(
+                jnp.concatenate([snap.delta_in, snap.delta_in_sign],
+                                axis=1), self._sh2d),
+        }
+        lo = self.n - self.hot
+        hot_blocks = {k: self._jax.device_put(v[lo:self.n + 1], self._rep2d)
+                      for k, v in blocks.items()}
+        spec = SnapshotShardSpec(n=self.n, n_shards=self.S,
+                                 rows_per_shard=self.rows_per_shard,
+                                 hot=self.hot)
+        return blocks, hot_blocks, spec
 
 
 class SnapshotRowView:

@@ -5,11 +5,18 @@ and the pure-jnp reference elsewhere (this container is CPU-only; Pallas
 TPU kernels are exercised via ``interpret=True`` in tests). All callers in
 the model/engine code go through this module so the implementation can be
 swapped per-backend without touching call sites.
+
+The environment variable ``REPRO_INTERSECT_IMPL`` overrides the ``auto``
+choice for the intersect (an explicit ``impl=`` argument always wins);
+``REPRO_INTERSECT_IMPL=pallas-interpret`` runs the Pallas kernel in
+interpret mode on any backend — the CI hook that keeps the TPU INT path
+conformance-tested on the CPU container.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -44,10 +51,17 @@ def intersect_padded(a: jax.Array, b: jax.Array, sentinel: int,
                      impl: str = "auto") -> jax.Array:
     """Row-wise padded-set intersection; see kernels/ref.py for semantics.
 
-    a, b: int32[B, D]. ``impl``: auto | pallas | ref | chunked | binary |
-    interpret. ``binary`` needs ``b`` rows fully ascending (holes only in
-    the tail) — see kernels/ref.py.
+    a: int32[B, Da], b: int32[B, Db] (widths may differ — the Pallas path
+    pads both operands to the wider width; holes are sentinel-valued so
+    padding never adds members). ``impl``: auto | pallas | ref | chunked |
+    binary | interpret (alias ``pallas-interpret``). ``binary`` needs
+    ``b`` rows fully ascending (holes only in the tail) — see
+    kernels/ref.py. ``auto`` honours ``REPRO_INTERSECT_IMPL``.
     """
+    if impl == "auto":
+        impl = os.environ.get("REPRO_INTERSECT_IMPL", "").strip() or "auto"
+    if impl == "pallas-interpret":
+        impl = "interpret"
     if impl == "auto":
         impl = "pallas" if _on_tpu() else ("chunked" if a.shape[-1] > 512
                                            else "ref")
@@ -58,14 +72,15 @@ def intersect_padded(a: jax.Array, b: jax.Array, sentinel: int,
     if impl == "binary":
         return ref.sorted_intersect_binary(a, b, sentinel)
     interpret = impl == "interpret"
-    B, D = a.shape
+    B, Da = a.shape
+    W = max(Da, b.shape[1])
     bm = 8 if B % 8 == 0 else 1
-    bk = 128 if D % 128 == 0 else D
-    ap = _pad_to(a, 0, bm, sentinel)
-    bp = _pad_to(b, 0, bm, sentinel)
+    bk = 128 if W % 128 == 0 else W
+    ap = _pad_to(_pad_to(a, 1, W, sentinel), 0, bm, sentinel)
+    bp = _pad_to(_pad_to(b, 1, W, sentinel), 0, bm, sentinel)
     out = sorted_intersect_pallas(ap, bp, sentinel, bm=bm, bk=bk,
                                   interpret=interpret)
-    return out[:B]
+    return out[:B, :Da]
 
 
 # --------------------------------------------------------------------------

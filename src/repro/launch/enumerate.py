@@ -22,7 +22,11 @@ Continuous enumeration (S-BENU, Alg. 4) runs the timestep loop instead:
         --steps 3 --update-batch 500
 
 ``--engine sbenu`` interprets every task; ``--engine sbenu-jax`` runs the
-vectorized delta-frontier engine over the six-block device snapshot.
+vectorized delta-frontier engine over the six-block device snapshot;
+``--engine sbenu-dist`` shards the six blocks over every device
+(``--devices N`` forces an N-way host mesh) with typed DBQs served by
+request/response all_to_all — ``--hot`` rows replicated, ``--rebalance``
+striping every delta frontier round-robin across the mesh.
 """
 
 from __future__ import annotations
@@ -60,6 +64,12 @@ def _run_continuous(args) -> None:
         backend = SBenuJaxBackend(collect="counts", d_min=d,
                                   delta_d_min=dd,
                                   snapshot_storage=args.snapshot_storage)
+    elif args.engine == "sbenu-dist":
+        from ..core.executor import SBenuDistBackend
+        d, dd = stream_width_floors(g0, batches)
+        backend = SBenuDistBackend(collect="counts", d_min=d,
+                                   delta_d_min=dd, hot=args.hot,
+                                   rebalance=args.rebalance)
     total_p = total_m = 0
     t_all = 0.0
     for step, batch in enumerate(batches, 1):
@@ -78,6 +88,11 @@ def _run_continuous(args) -> None:
     print(f"\nengine             : {args.engine}")
     print(f"total dR+ / dR-    : {total_p} / {total_m}")
     print(f"wall time          : {t_all:.2f}s over {args.steps} steps")
+    if args.engine == "sbenu-dist":
+        import jax
+        print(f"mesh               : {len(jax.devices())} devices "
+              f"(hot {args.hot} rows replicated, "
+              f"rebalance {'on' if args.rebalance else 'off'})")
 
 
 def main():
@@ -89,13 +104,16 @@ def main():
                     default="powerlaw")
     ap.add_argument("--engine",
                     choices=["dist", "jax", "ref", "oocache", "sbenu",
-                             "sbenu-jax"],
+                             "sbenu-jax", "sbenu-dist"],
                     default="dist")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (set before jax init)")
     ap.add_argument("--batch-per-shard", type=int, default=256)
     ap.add_argument("--hot", type=int, default=64,
-                    help="replicated/pinned top-degree rows (dist, oocache)")
+                    help="replicated/pinned hot rows: top-degree for "
+                         "dist/oocache (degree-relabeled load); the "
+                         "highest-id range for sbenu-dist (streams are "
+                         "not relabeled)")
     ap.add_argument("--cache-frac", type=float, default=0.15,
                     help="oocache: device LRU slab size as a fraction of N")
     ap.add_argument("--no-prefetch", action="store_true",
@@ -120,7 +138,7 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
-    if args.engine in ("sbenu", "sbenu-jax"):
+    if args.engine in ("sbenu", "sbenu-jax", "sbenu-dist"):
         _run_continuous(args)
         return
 

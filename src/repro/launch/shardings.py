@@ -233,10 +233,31 @@ def batch_specs(family: str, kind: str, specs: Dict[str, Any],
             return {k: (P(shard) if v.ndim == 1
                         else P(*([None] * v.ndim)))
                     for k, v in specs.items()}
+        if kind == "sbenu_dist_enum":
+            return sbenu_snapshot_specs(shard)
         return {"shards": P(shard, None, None),
                 "hot_rows": P(None, None),
                 "starts": P(shard), "starts_valid": P(shard)}
     raise KeyError(family)
+
+
+def sbenu_snapshot_specs(axis="shard") -> Dict[str, P]:
+    """PartitionSpecs for the mesh-sharded six-block streaming snapshot —
+    the layout ``ShardedDeviceSnapshotStore`` (graph/dynamic.py) places
+    and ``build_sbenu_dist_step`` consumes, spelled as specs.
+
+    Value blocks (``prev_/cur_{out,in}``, the joint ``delta`` blocks) are
+    row-block partitioned over the enumeration axis; the ``hot_*`` slices
+    (highest-id rows + sentinel) are replicated on every device, exactly
+    mirroring ``DistBackend``'s static ``shards``/``hot_rows`` split.
+    ``axis`` may be one mesh axis name or a tuple of axes to flatten.
+    """
+    blocks = ("prev_out", "cur_out", "prev_in", "cur_in",
+              "delta_joint_out", "delta_joint_in")
+    specs = {name: P(axis, None) for name in blocks}
+    specs.update({f"hot_{name}": P(None, None) for name in blocks})
+    specs.update(starts=P(axis), starts_valid=P(axis))
+    return specs
 
 
 def sanitize(spec_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:

@@ -276,6 +276,49 @@ def test_driver_exact_with_odd_batch_under_overflow():
     assert sorted(be.seen) == list(range(23))
 
 
+class MultipleBackend(FakeBackend):
+    """FakeBackend advertising a mesh-style cap multiple; records every
+    caps tuple the driver hands it."""
+
+    cap_multiple = 8
+
+    def __init__(self, n, fanout=1):
+        super().__init__(n, fanout=fanout)
+        self.caps_seen = []
+
+    def run_chunk(self, ids, valid, universe_chunk, caps):
+        self.caps_seen.append(tuple(caps))
+        return super().run_chunk(ids, valid, universe_chunk, caps)
+
+
+def test_driver_rounds_caps_to_backend_multiple():
+    """The driver — not the backend — must keep every caps tuple it hands
+    out divisible by cap_multiple (the rebalancer's ``cap % mesh size``
+    contract): initial caps AND capacity-doubled ones. Regression for the
+    `assert cap % n_shards == 0` crash on odd user/degree-derived caps."""
+    be = MultipleBackend(n=20, fanout=4)
+    st = drive(be, None, None, ExecutorConfig(batch=4, caps=(7,)))
+    assert st.count == 20
+    assert sorted(be.seen) == list(range(20))
+    assert be.caps_seen and all(c % 8 == 0
+                                for caps in be.caps_seen for c in caps)
+    # odd initial caps rounded up (7 -> 8), not truncated down to 0
+    assert min(c for caps in be.caps_seen for c in caps) >= 8
+
+
+def test_driver_rounds_escalated_caps_to_multiple():
+    class OddGrowth(MultipleBackend):
+        def grow_caps(self, caps):
+            return tuple(c * 2 + 1 for c in caps)   # always odd
+
+    be = OddGrowth(n=3, fanout=40)
+    st = drive(be, None, None,
+               ExecutorConfig(batch=1, caps=(1,), max_retries=8))
+    assert st.count == 3
+    assert st.chunks_retried > 0
+    assert all(c % 8 == 0 for caps in be.caps_seen for c in caps)
+
+
 def test_split_id_batch_respects_granularity_and_floor():
     ids = np.arange(16, dtype=np.int32)
     valid = np.ones(16, bool)
@@ -365,3 +408,163 @@ def test_sbenu_jax_forced_overflow_stays_exact():
     assert st.extras["delta_plus"] == want_p
     assert st.extras["delta_minus"] == want_m
     assert st.chunks_split > 0
+
+
+# --------------------------------------------------------------------------
+# Distributed streaming conformance: sbenu-dist == interpreter == oracle.
+# In-process runs use the default single device (S=1 makes the typed-DBQ
+# all_to_alls local exchanges — fast tier); the 8-way matrix including the
+# rebalancer + forced-overflow re-split runs in a subprocess (slow tier).
+# --------------------------------------------------------------------------
+
+
+def test_sbenu_dist_stream_conformance_single_device():
+    from repro.core.estimate import GraphStats
+    from repro.core.executor import SBenuDistBackend
+    from repro.core.sbenu import (generate_best_sbenu_plans, run_timestep,
+                                  snapshot_diff_oracle)
+    from repro.graph.dynamic import SnapshotStore, stream_width_floors
+    from repro.graph.generate import edge_stream
+
+    for pname in ("dtoy", "q1'"):
+        p = get_pattern(pname)
+        g0, batches = edge_stream(n=24, m_init=110, steps=2, batch=24,
+                                  seed=17, delete_frac=0.4)
+        store = SnapshotStore(g0)
+        plans = generate_best_sbenu_plans(p, GraphStats(24, 110,
+                                                        delta_edges=24))
+        d, dd = stream_width_floors(g0, batches)
+        # widths pinned over the stream: the sharded blocks stay resident
+        backend = SBenuDistBackend(hot=4, d_min=d, delta_d_min=dd)
+        for batch in batches:
+            want_p, want_m = snapshot_diff_oracle(p, store, batch)
+            assert any(op == "-" for op, _, _ in batch)
+            dp, dm, _ = run_timestep(p, plans, store, batch,
+                                     backend=backend, chunk=16)
+            assert dp == want_p and dm == want_m, pname
+        # the sharded snapshot stayed resident (one initial build only)
+        assert backend.dstore.rebuilds == 1
+
+
+@pytest.mark.slow
+def test_sbenu_dist_eight_way_stream_matrix():
+    """The full randomized-stream matrix on an 8-way host mesh, with hot
+    rows + the frontier rebalancer on, plus the forced-overflow re-split
+    case with odd caps — the regression for the driver handing the
+    rebalancer capacities not divisible by the mesh size
+    (`assert cap % n_shards == 0`, core/engine_dist.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent("""
+        import json
+        from repro.core.estimate import GraphStats
+        from repro.core.pattern import get_pattern
+        from repro.core.executor import (ExecutorConfig, SBenuDistBackend,
+                                         drive)
+        from repro.core.sbenu import (generate_best_sbenu_plans,
+                                      run_timestep, snapshot_diff_oracle)
+        from repro.graph.dynamic import SnapshotStore
+        from repro.graph.generate import edge_stream
+
+        res = {}
+        for pname in ("dtoy", "q1'", "q2'", "q3'", "q5'"):
+            p = get_pattern(pname)
+            g0, batches = edge_stream(n=24, m_init=110, steps=2, batch=24,
+                                      seed=17, delete_frac=0.4)
+            store = SnapshotStore(g0)
+            store_ref = SnapshotStore(g0)
+            store_jax = SnapshotStore(g0)
+            plans = generate_best_sbenu_plans(
+                p, GraphStats(24, 110, delta_edges=24))
+            backend = SBenuDistBackend(hot=4, rebalance=True)
+            ok = True
+            for batch in batches:
+                want_p, want_m = snapshot_diff_oracle(p, store, batch)
+                dp, dm, _ = run_timestep(p, plans, store, batch,
+                                         backend=backend, chunk=16)
+                rp, rm, _ = run_timestep(p, plans, store_ref, batch,
+                                         engine="ref")
+                jp, jm, _ = run_timestep(p, plans, store_jax, batch,
+                                         engine="sbenu-jax", chunk=16)
+                ok = ok and dp == rp == jp == want_p
+                ok = ok and dm == rm == jm == want_m
+            res[pname] = ok
+
+        # forced overflow with ODD caps on the 8-way mesh: the driver must
+        # round to the mesh multiple (previously: rebalancer assert crash)
+        p = get_pattern("q1'")
+        g0, batches = edge_stream(n=40, m_init=250, steps=1, batch=40,
+                                  seed=5)
+        store = SnapshotStore(g0)
+        plans = generate_best_sbenu_plans(
+            p, GraphStats(40, 250, delta_edges=40))
+        want_p, want_m = snapshot_diff_oracle(p, store, batches[0])
+        store.begin_step(batches[0])
+        st = drive(SBenuDistBackend(rebalance=True), plans, store,
+                   ExecutorConfig(batch=32, caps=[7, 7, 7],
+                                  max_retries=12, collect_matches=True))
+        store.end_step()
+        res["odd_caps_exact"] = (st.extras["delta_plus"] == want_p
+                                 and st.extras["delta_minus"] == want_m)
+        # tiny even caps actually exercise the mesh-wide re-split path
+        store2 = SnapshotStore(g0)
+        want_p2, want_m2 = snapshot_diff_oracle(p, store2, batches[0])
+        store2.begin_step(batches[0])
+        st2 = drive(SBenuDistBackend(), plans, store2,
+                    ExecutorConfig(batch=32, caps=[2, 2, 2],
+                                   max_retries=12, collect_matches=True))
+        store2.end_step()
+        res["overflow_exact"] = (st2.extras["delta_plus"] == want_p2
+                                 and st2.extras["delta_minus"] == want_m2)
+        res["overflow_split"] = int(st2.chunks_split)
+        print(json.dumps(res))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for pname in ("dtoy", "q1'", "q2'", "q3'", "q5'"):
+        assert res[pname], pname
+    assert res["odd_caps_exact"]
+    assert res["overflow_exact"]
+    assert res["overflow_split"] > 0
+
+
+# --------------------------------------------------------------------------
+# The Pallas INT path on CPU: REPRO_INTERSECT_IMPL=pallas-interpret routes
+# every auto intersect through the Pallas kernel in interpret mode — both
+# the static frontier engine and the streaming delta engine must stay
+# exact (this is the only CI coverage the TPU kernel dispatch path gets)
+# --------------------------------------------------------------------------
+
+
+def test_intersect_pallas_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_INTERSECT_IMPL", "pallas-interpret")
+    from repro.core.engine_sbenu_jax import _resolve_intersect_impl
+    assert _resolve_intersect_impl("auto") == "interpret"
+    assert _resolve_intersect_impl("binary") == "binary"   # explicit wins
+
+    # static path (engine_jax -> kernels.ops dispatch)
+    g = GRAPHS["er"]
+    p = get_pattern("triangle")
+    plan = generate_best_plan(p, g.stats())
+    st = make_executor("jax").run(plan, g, batch=32)
+    assert st.count == brute_count("triangle", g)
+
+    # streaming path (mixed-width intersects: delta rows x adjacency rows)
+    from repro.core.estimate import GraphStats
+    from repro.core.executor import SBenuJaxBackend
+    from repro.core.sbenu import (generate_best_sbenu_plans, run_timestep,
+                                  snapshot_diff_oracle)
+    from repro.graph.dynamic import SnapshotStore
+    from repro.graph.generate import edge_stream
+    sp = get_pattern("q1'")
+    g0, batches = edge_stream(n=24, m_init=110, steps=1, batch=20, seed=3)
+    store = SnapshotStore(g0)
+    plans = generate_best_sbenu_plans(sp, GraphStats(24, 110,
+                                                     delta_edges=20))
+    want_p, want_m = snapshot_diff_oracle(sp, store, batches[0])
+    dp, dm, _ = run_timestep(sp, plans, store, batches[0],
+                             backend=SBenuJaxBackend(), chunk=16)
+    assert dp == want_p and dm == want_m

@@ -190,3 +190,76 @@ def test_sbenu_plans_reject_static_engine():
                                       GraphStats(100, 500, delta_edges=10))
     with pytest.raises(NotImplementedError):
         check_jit_supported(plans[0])
+
+
+# --------------------------------------------------------------------------
+# storage: mesh-sharded six-block store vs a fresh host build (in-process
+# single-device mesh — the 8-way layout is covered by the slow conformance
+# matrix in test_conformance.py)
+# --------------------------------------------------------------------------
+
+
+def test_sharded_snapshot_store_matches_host_build():
+    import jax
+    from jax.sharding import Mesh
+    from repro.graph.dynamic import ShardedDeviceSnapshotStore
+
+    g0, batches = edge_stream(n=30, m_init=140, steps=3, batch=25, seed=9)
+    store = SnapshotStore(g0)
+    mesh = Mesh(np.array(jax.devices()), ("shard",))
+    ds = ShardedDeviceSnapshotStore.for_store(store, mesh, hot=4)
+    assert ShardedDeviceSnapshotStore.for_store(store, mesh, hot=4) is ds
+    # a plain device mirror with "the same" layout params must NOT alias
+    # the sharded one (their params tuples differ by construction)
+    assert DeviceSnapshotStore.for_store(store) is not ds
+    n = store.n
+    for batch in batches:
+        store.begin_step(batch)
+        blocks, hot, spec = ds.step_sharded()
+        want = store.device_snapshot()
+        assert spec.n_shards * spec.rows_per_shard \
+            == np.asarray(blocks["prev_out"]).shape[0]
+        for name, wrows in (("prev_out", want.prev_out),
+                            ("cur_out", want.cur_out),
+                            ("prev_in", want.prev_in),
+                            ("cur_in", want.cur_in)):
+            got = np.asarray(blocks[name])
+            for v in range(n):
+                assert _row_set(got, v, n) == _row_set(wrows, v, n), \
+                    (name, v)
+            # hot slice = the top-id rows + the sentinel row, replicated
+            hrows = np.asarray(hot[name])
+            assert hrows.shape[0] == spec.hot + 1
+            assert (hrows == got[n - spec.hot:n + 1]).all()
+        # joint delta block round-trips values and signs
+        dj = np.asarray(blocks["delta_joint_out"])
+        dd = dj.shape[1] // 2
+        for v in range(n):
+            plus = {int(x) for x, s in zip(dj[v, :dd], dj[v, dd:])
+                    if s == 1}
+            minus = {int(x) for x, s in zip(dj[v, :dd], dj[v, dd:])
+                     if s == -1}
+            assert plus == set(store.get_adj(v, "delta", "out", "+")), v
+            assert minus == set(store.get_adj(v, "delta", "out", "-")), v
+        store.end_step()
+    assert ds.rebuilds >= 1
+
+
+def test_sbenu_snapshot_partition_specs_match_engine_layout():
+    """The published specs (launch/shardings.py) must spell exactly the
+    layout build_sbenu_dist_step's in_specs consume: value blocks
+    row-partitioned, hot slices + starts as the engine expects."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.engine_sbenu_dist import BLOCK_ORDER
+    from repro.launch.shardings import batch_specs, sbenu_snapshot_specs
+
+    specs = sbenu_snapshot_specs("shard")
+    assert len(specs) == 2 * len(BLOCK_ORDER) + 2
+    for name in BLOCK_ORDER:
+        assert specs[name] == P("shard", None), name
+        assert specs[f"hot_{name}"] == P(None, None), name
+    assert specs["starts"] == P("shard")
+    assert specs["starts_valid"] == P("shard")
+    # the dry-run kind routes to the same specs (flattened mesh axes)
+    via_kind = batch_specs("benu", "sbenu_dist_enum", {}, False)
+    assert via_kind["prev_out"] == P(("data", "model"), None)

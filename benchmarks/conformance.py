@@ -19,18 +19,24 @@ PATTERNS = ("triangle", "square", "clique4", "house")
 def run() -> Table:
     g = powerlaw(150, 4, seed=7)
     t = Table("Cross-engine conformance (unified Executor API)",
-              ["pattern", "ref", "jax", "oocache", "ooc hit %", "agree"])
+              ["pattern", "ref", "jax", "jax-gpu", "oocache", "ooc hit %",
+               "agree"])
     for pname in PATTERNS:
         p = get_pattern(pname)
         plan = generate_best_plan(p, g.stats())
         ref = make_executor("ref").run(plan, g, batch=64)
         jx = make_executor("jax").run(plan, g, batch=64)
+        # fused gather+intersect fetch path, Pallas kernel in interpret
+        # mode so the real kernel code runs on this CPU container
+        gpu = make_executor("jax-gpu",
+                            gather_intersect_impl="interpret").run(
+                                plan, g, batch=64)
         # whole device footprint (slab + staging + hot + sentinel)
         # bounded below 25% of the graph's rows, like the tests
         ooc = make_executor("oocache", cache_rows=int(g.n * 0.12),
                             hot=int(g.n * 0.04)).run(plan, g, batch=64)
-        agree = ref.count == jx.count == ooc.count
-        t.add(pname, ref.count, jx.count, ooc.count,
+        agree = ref.count == jx.count == gpu.count == ooc.count
+        t.add(pname, ref.count, jx.count, gpu.count, ooc.count,
               f"{ooc.extras['cache']['hit_rate'] * 100:.1f}",
               "yes" if agree else "NO")
     return t

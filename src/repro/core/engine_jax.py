@@ -31,8 +31,9 @@ compaction is needed until ENU.
 from __future__ import annotations
 
 import functools
+from collections import Counter
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +95,39 @@ def _liveness(plan: Plan) -> List[frozenset]:
                               if v[0] != "op")
         live[i] = acc
     return live
+
+
+def classify_fusable_dbqs(plan: Plan) -> FrozenSet[Var]:
+    """DBQ targets whose gather can fuse into the intersect kernel.
+
+    A DBQ row set is *fusable* when it is consumed exactly once, by an
+    INT or TRC, as a **non-first** operand: the fused kernel
+    (kernels/gather_intersect.py) then probes the running result against
+    the adjacency rows directly and the ``[B, D]`` gather is never
+    materialized. First operands stay materialized (their slots define
+    the result layout, keeping fused runs bit-equal to unfused ones), and
+    multi-use row sets stay materialized too — re-gathering per consumer
+    would move more HBM bytes than the one materialization it saves
+    (that reuse is exactly the paper's triangle cache). Used by both the
+    engine and ``benchmarks/roofline.py --fused`` so the bytes model and
+    the executed program agree.
+    """
+    use_count: Counter = Counter()
+    for ins in plan.instrs:
+        use_count.update(ins.uses())
+    dbq_targets = {ins.target for ins in plan.instrs if ins.op == DBQ}
+    fusable = set()
+    for ins in plan.instrs:
+        if ins.op == INT:
+            consumed = ins.operands[1:]
+        elif ins.op == TRC:
+            consumed = ins.operands[3:]      # engine folds operands[2] ∩ [3]
+        else:
+            continue
+        for v in consumed:
+            if v in dbq_targets and use_count[v] == 1:
+                fusable.add(v)
+    return frozenset(fusable)
 
 
 def check_jit_supported(plan: Plan) -> bool:
@@ -262,7 +296,9 @@ def build_enumerator(plan: Plan,
                      collect_matches: bool = False,
                      intersect_impl: str = "auto",
                      post_expand: Optional[Callable] = None,
-                     compaction: str = "cumsum"
+                     compaction: str = "cumsum",
+                     fused_rows: Optional[jax.Array] = None,
+                     gather_intersect_impl: str = "auto"
                      ) -> Callable[..., EnumResult]:
     """Compile ``plan`` into a jittable function of (starts, starts_valid
     [, universe_chunk]).
@@ -274,6 +310,16 @@ def build_enumerator(plan: Plan,
     order) additionally take ``universe_chunk: int32[W]`` — a sentinel-padded
     slice of V(G); the driver sums counts over chunks. This is the paper's
     |V(G)|/θ subtask split for non-adjacent (u_k1, u_k2), vectorized.
+
+    ``fused_rows`` (the ``[N+1, D]`` device adjacency, row N all-sentinel)
+    turns on the fused fetch path: DBQ targets classified by
+    :func:`classify_fusable_dbqs` stay *lazy* — the engine carries the
+    frontier's id column instead of gathered rows (so ENU re-indexes a
+    ``[B]`` column, not a ``[B, D]`` block) and the consuming INT/TRC
+    runs ``kops.fused_gather_intersect`` (``gather_intersect_impl``
+    selects the kernel; kernels/gather_intersect.py), which never
+    materializes the gathered rows. Results are bit-equal to the unfused
+    path.
     """
     has_universe = check_jit_supported(plan)
     live = _liveness(plan)
@@ -285,12 +331,17 @@ def build_enumerator(plan: Plan,
 
     isect = functools.partial(kops.intersect_padded, sentinel=sentinel,
                               impl=intersect_impl)
+    fusable = (classify_fusable_dbqs(plan) if fused_rows is not None
+               else frozenset())
+    fused = functools.partial(kops.fused_gather_intersect, rows=fused_rows,
+                              sentinel=sentinel, impl=gather_intersect_impl)
 
     def run(starts: jax.Array, starts_valid: jax.Array,
             universe_chunk: Optional[jax.Array] = None) -> EnumResult:
         if has_universe and universe_chunk is None:
             raise ValueError("plan consumes V(G): pass universe_chunk")
         env: Dict[Var, jax.Array] = {}
+        lazy: set = set()        # fusable DBQ targets currently holding ids
         valid = starts_valid
         cdt = _count_dtype()
         count = jnp.zeros((), cdt)
@@ -306,23 +357,34 @@ def build_enumerator(plan: Plan,
                 env[ins.target] = jnp.where(valid, starts, sentinel)
             elif ins.op == DBQ:
                 ids = env[ins.operands[0]]
-                env[ins.target] = fetch(ids)
-            elif ins.op in (INT, TRC):
-                if ins.op == TRC:
-                    sets = [env[ins.operands[2]], env[ins.operands[3]]]
+                if ins.target in fusable:
+                    # lazy: keep the id column; the consuming INT/TRC
+                    # fuses the gather into the intersect kernel
+                    env[ins.target] = ids
+                    lazy.add(ins.target)
                 else:
-                    sets = []
-                    for v in ins.operands:
-                        if v[0] == "VG":
-                            B = valid.shape[0]
-                            sets.append(jnp.broadcast_to(
-                                universe_chunk[None, :],
-                                (B, universe_chunk.shape[0])))
-                        else:
-                            sets.append(env[v])
-                res = sets[0]
-                for other in sets[1:]:
-                    res = isect(res, other)
+                    env[ins.target] = fetch(ids)
+            elif ins.op in (INT, TRC):
+                opvars = (list(ins.operands[2:4]) if ins.op == TRC
+                          else list(ins.operands))
+                res = None
+                for v in opvars:
+                    if v[0] == "VG":
+                        B = valid.shape[0]
+                        s = jnp.broadcast_to(universe_chunk[None, :],
+                                             (B, universe_chunk.shape[0]))
+                        res = s if res is None else isect(res, s)
+                    elif v in lazy:
+                        lazy.discard(v)          # single-use by construction
+                        # classify_fusable_dbqs only marks non-first
+                        # operands lazy (first operands define the result
+                        # slots and were materialized at their DBQ), so a
+                        # running result always exists here
+                        assert res is not None, v
+                        res = fused(res, env[v])
+                    else:
+                        s = env[v]
+                        res = s if res is None else isect(res, s)
                 if ins.filters:
                     res = _apply_filters(res, ins.filters, env, sentinel)
                 env[ins.target] = res

@@ -24,6 +24,15 @@ The per-level host sync is the price of the pull model; the executor
 backend (``core/executor.py``, ``oocache``) hides most of it by
 prefetching the next chunk's predicted rows while the current chunk
 computes (double-buffered ``device_put``).
+
+Intersections go through :func:`repro.kernels.ops.intersect_padded`, so
+the impl follows the shared dispatch registry (explicit
+``intersect_impl`` > ``REPRO_INTERSECT_IMPL`` > platform × width default
+— kernels/dispatch.py, documented in docs/KERNELS.md). The *fused*
+gather+intersect path does not apply here: rows arrive through the host
+cache, not a device-resident adjacency, so there is no HBM gather to
+fuse away — the cache's per-level dedup plays the equivalent
+bytes-saving role on the PCIe boundary.
 """
 
 from __future__ import annotations

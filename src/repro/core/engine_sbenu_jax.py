@@ -172,18 +172,22 @@ def _resolve_intersect_impl(impl: str) -> str:
     """``auto`` -> Pallas on TPU, binary-search elsewhere (delta rows are
     kept ascending precisely so the O(D log D) path applies).
 
-    ``REPRO_INTERSECT_IMPL`` overrides the ``auto`` choice only (an
-    explicit argument always wins); the value ``pallas-interpret`` selects
-    the Pallas kernel in interpret mode, which is how CI exercises the
-    TPU INT path on the CPU container.
+    A thin veneer over :func:`repro.kernels.dispatch.resolve_impl` — the
+    one resolution order (explicit impl > ``REPRO_INTERSECT_IMPL`` env
+    override > platform default) shared with kernels/ops.py; this module
+    only swaps the CPU default from the dense probe to the binary search
+    its ascending-row invariant enables (``_resort_fn`` maintains it).
     """
-    if impl == "auto":
-        impl = os.environ.get("REPRO_INTERSECT_IMPL", "").strip() or "auto"
-    if impl in ("pallas-interpret", "interpret"):
-        return "interpret"
-    if impl != "auto":
-        return impl
-    return "pallas" if jax.default_backend() == "tpu" else "binary"
+    from ..kernels.dispatch import resolve_impl
+    resolved = resolve_impl("intersect", impl)
+    env = os.environ.get("REPRO_INTERSECT_IMPL", "").strip()
+    # env values "" and the literal "auto" are both non-overrides: in
+    # either case resolve_impl fell through to the platform default, and
+    # this engine's CPU default is the binary probe, not the dense one
+    if impl == "auto" and resolved in ("ref", "chunked") \
+            and env in ("", "auto"):
+        return "binary"
+    return resolved
 
 
 def _resort_fn(binary: bool) -> Callable[[jax.Array], jax.Array]:

@@ -23,6 +23,9 @@ Backends::
 
     ref        pure-Python oracle interpreter        (core/ref_engine.py)
     jax        single-device vectorized frontier     (core/engine_jax.py)
+    jax-gpu    same engine, fused gather+intersect
+               fetch path (kernels/gather_intersect
+               .py; see docs/KERNELS.md)             (core/engine_jax.py)
     dist       shard_map SPMD over a device mesh     (core/engine_dist.py)
     oocache    out-of-core: host-RAM row shards +
                bounded device cache + async prefetch (core/engine_ooc.py)
@@ -411,16 +414,34 @@ class RefBackend(ExecutorBackend):
 
 
 class JaxBackend(ExecutorBackend):
-    """Lockstep frontier expansion on one device (core/engine_jax.py)."""
+    """Lockstep frontier expansion on one device (core/engine_jax.py).
+
+    ``fused`` turns on the fused gather+intersect fetch path
+    (kernels/gather_intersect.py): single-use DBQ row sets are never
+    materialized — the consuming INT probes the adjacency rows straight
+    out of the Pallas pipeline. Left ``None``, the ``REPRO_FUSED_FETCH``
+    environment toggle decides (off by default; the ``jax-gpu`` backend
+    defaults it on). ``gather_intersect_impl`` picks the fused kernel
+    impl (auto | pallas | interpret | ref/chunked/binary fallbacks).
+    """
 
     name = "jax"
 
-    def __init__(self, compaction: str = "cumsum"):
+    #: what REPRO_FUSED_FETCH falls back to when unset and fused=None
+    #: (JaxGpuBackend flips it to True)
+    _fused_default = False
+
+    def __init__(self, compaction: str = "cumsum",
+                 fused: Optional[bool] = None,
+                 gather_intersect_impl: str = "auto"):
         self._compaction = compaction
+        self._fused_arg = fused
+        self._gi_impl = gather_intersect_impl
 
     def prepare(self, plan: Plan, source: Graph,
                 config: ExecutorConfig) -> None:
         import jax
+        from ..kernels import dispatch
         from .engine_jax import (DeviceGraph, check_jit_supported,
                                  default_caps)
         self.plan, self.graph = plan, source
@@ -432,8 +453,11 @@ class JaxBackend(ExecutorBackend):
             tuple(default_caps(plan, config.batch, self.dg.d))
         self._collect = config.collect_matches
         self._intersect = config.intersect_impl
+        self.fused = (self._fused_arg if self._fused_arg is not None
+                      else dispatch.fused_fetch_enabled(self._fused_default))
         self._jit = jax.jit
         self._runners: Dict[Tuple[int, Tuple[int, ...]], Callable] = {}
+        self._level_acc: Optional[np.ndarray] = None
 
     def _n_starts(self) -> int:
         return self.graph.n
@@ -453,7 +477,10 @@ class JaxBackend(ExecutorBackend):
             run = build_enumerator(self.plan, self.sentinel, caps, self.fetch,
                                    collect_matches=self._collect,
                                    intersect_impl=self._intersect,
-                                   compaction=self._compaction)
+                                   compaction=self._compaction,
+                                   fused_rows=(self.dg.rows if self.fused
+                                               else None),
+                                   gather_intersect_impl=self._gi_impl)
             self._runners[key] = self._jit(run)
         return self._runners[key]
 
@@ -468,8 +495,46 @@ class JaxBackend(ExecutorBackend):
         if self._collect and ov == 0 and res.matches is not None:
             m = np.asarray(res.matches)
             matches = m[np.asarray(res.matches_valid)]
+        if ov == 0 and res.level_sizes:
+            # accepted chunks only: aggregate frontier occupancy per ENU
+            # level (benchmarks/roofline.py --fused reads this to model
+            # achieved vs lane-math bytes for the fetch paths)
+            lv = np.asarray([int(s) for s in res.level_sizes], np.int64)
+            self._level_acc = (lv if self._level_acc is None
+                               else self._level_acc + lv)
         return ChunkResult(count=int(res.count), overflow=ov,
                            matches=matches)
+
+    def finalize(self, stats: ExecStats) -> None:
+        stats.extras.update(
+            level_sizes=(self._level_acc if self._level_acc is not None
+                         else np.zeros(0, np.int64)),
+            fused_fetch=self.fused)
+
+
+class JaxGpuBackend(JaxBackend):
+    """The accelerator fetch path: ``jax`` with fused gather+intersect on.
+
+    BENU's hot loop — gather adjacency rows, intersect with the candidate
+    set — is memory-bound; this backend keeps it in VMEM/registers
+    (kernels/gather_intersect.py) instead of round-tripping a ``[B, D]``
+    gather block through HBM. On a real GPU/TPU the dispatch registry
+    resolves the fused kernel to the compiled Pallas path; on the CPU CI
+    container it falls back to the unfused reference unless interpret
+    mode is forced (``gather_intersect_impl="interpret"`` or
+    ``REPRO_GATHER_INTERSECT_IMPL=pallas-interpret``), which is how the
+    conformance matrix covers it. Counts and match sets are bit-equal to
+    ``jax`` either way. Fusion defaults on; ``REPRO_FUSED_FETCH=0``
+    turns it off (A/B debugging) without leaving this backend.
+    """
+
+    name = "jax-gpu"
+    _fused_default = True
+
+    def __init__(self, compaction: str = "cumsum",
+                 gather_intersect_impl: str = "auto"):
+        super().__init__(compaction=compaction,
+                         gather_intersect_impl=gather_intersect_impl)
 
 
 # --------------------------------------------------------------------------
@@ -1136,6 +1201,7 @@ class SBenuDistBackend(ExecutorBackend):
 BACKENDS = {
     "ref": RefBackend,
     "jax": JaxBackend,
+    "jax-gpu": JaxGpuBackend,
     "dist": DistBackend,
     "oocache": OocBackend,
     "sbenu": SBenuBackend,

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spot kernels (paper §4.3.1: INT dominates the cost model).
+# Public entry points live in ops.py; impl resolution / tile table /
+# operand padding in dispatch.py; pure-jnp oracles in ref.py. Inventory +
+# the "how to add a kernel" recipe: docs/KERNELS.md.

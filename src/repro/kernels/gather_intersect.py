@@ -1,0 +1,111 @@
+"""Fused Pallas kernel: DBQ-level row gather + padded-set intersection.
+
+The accelerator fetch path of the ROADMAP. BENU's hot loop is
+``rows = adjacency[ids]; cand = cand ∩ rows`` — one DBQ gather feeding one
+INT per frontier level. Executed separately (engine_jax's unfused path)
+the gather materializes a ``[B, D]`` row block in HBM that the intersect
+immediately re-reads: 3x the row bytes over the minimum. This kernel fuses
+the two: each addressed adjacency row is DMA'd HBM -> VMEM exactly once by
+the Pallas pipeline and consumed from VMEM by the membership probe — the
+gathered block never exists in HBM.
+
+Design (TPU-native; CI covers it via ``interpret=True`` on CPU)
+---------------------------------------------------------------
+The gather uses the scalar-prefetch idiom: ``ids`` ride in SMEM
+(``PrefetchScalarGridSpec``) and the adjacency's BlockSpec *index map*
+addresses row ``ids[i*bm + j]`` directly, so the pipeline fetches exactly
+the rows the frontier asks for — arbitrary order, duplicates included —
+while ``pallas_call``'s double buffering overlaps row ``k+1``'s DMA with
+row ``k``'s probe. The grid is ``(B // bm, bm)``: the candidate/output
+``[bm, Dc]`` blocks are revisited across the ``bm`` inner steps (flushed
+to HBM once per outer step), each inner step probing one candidate row
+against one fetched adjacency row in ``bk``-lane chunks — the same
+VPU-friendly broadcast-compare inner loop as kernels/sorted_intersect.py
+(``[1, Dc, bk]`` equality reduce), with the same VMEM budget math.
+
+Sentinel-awareness: ``ids`` must be pre-clipped to ``[0, n]`` (row ``n``
+is the all-sentinel row — ops.fused_gather_intersect does this), and rows
+addressed by a sentinel id skip the probe entirely and write an
+all-sentinel output row (an invalid frontier row can never gain members).
+Holes never create members: a candidate hole equals the sentinel, which
+the validity mask removes regardless of the compare.
+
+Output keeps matching candidate entries **in place** (holes = sentinel),
+so results remain valid padded sets — exactly ``intersect_padded(cand,
+adjacency[ids])`` bit for bit, which is what tests/test_gpu_fetch.py's
+property test pins.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_intersect_kernel(ids_ref, cand_ref, adj_ref, o_ref, *,
+                             sentinel: int, bk: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bm = pl.num_programs(1)
+    cand = cand_ref[pl.dslice(j, 1), :]                 # [1, Dc]
+    rid = ids_ref[i * bm + j]
+    nchunks = adj_ref.shape[1] // bk
+
+    @pl.when(rid < sentinel)
+    def _probe():
+        def body(k, member):
+            chunk = adj_ref[:, pl.dslice(k * bk, bk)]   # [1, bk]
+            eq = cand[:, :, None] == chunk[:, None, :]  # [1, Dc, bk]
+            return member | jnp.any(eq, axis=-1)
+
+        member = jax.lax.fori_loop(
+            0, nchunks, body, jnp.zeros(cand.shape, dtype=jnp.bool_))
+        o_ref[pl.dslice(j, 1), :] = jnp.where(
+            (cand != sentinel) & member, cand, sentinel)
+
+    @pl.when(rid >= sentinel)
+    def _sentinel_row():
+        o_ref[pl.dslice(j, 1), :] = jnp.full_like(cand, sentinel)
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel", "bm", "bk",
+                                             "interpret"))
+def gather_intersect_pallas(ids: jax.Array, cand: jax.Array,
+                            adj: jax.Array, sentinel: int,
+                            bm: int = 8, bk: int = 128,
+                            interpret: bool = False) -> jax.Array:
+    """``cand[i] ∩ adj[ids[i]]`` per row, gather fused into the probe.
+
+    ids: int32[B] row indices, pre-clipped to ``[0, sentinel]``;
+    cand: int32[B, Dc] padded sets; adj: int32[N+1, D] padded adjacency
+    (row N all-sentinel). Returns int32[B, Dc] in ``cand``'s slots.
+    ``D`` must be a multiple of ``bk`` and ``B`` of ``bm`` (callers pad;
+    see ops.fused_gather_intersect).
+    """
+    B, Dc = cand.shape
+    D = adj.shape[1]
+    assert ids.shape == (B,), (ids.shape, cand.shape)
+    assert D % bk == 0, f"D={D} not a multiple of bk={bk}"
+    assert B % bm == 0, f"B={B} not a multiple of bm={bm}"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // bm, bm),
+        in_specs=[
+            pl.BlockSpec((bm, Dc), lambda i, j, ids: (i, 0)),
+            # the fused gather: the index map addresses the adjacency row
+            # the frontier asks for — no materialized [B, D] intermediate
+            pl.BlockSpec((1, D), lambda i, j, ids: (ids[i * bm + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, Dc), lambda i, j, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_intersect_kernel, sentinel=sentinel,
+                          bk=bk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Dc), cand.dtype),
+        interpret=interpret,
+    )(ids, cand, adj)

@@ -2,7 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.enumerate \
         --pattern chordal-square --n 2000 --edges 8000 [--devices 8] \
-        [--engine dist|jax|ref|oocache] [--hot 64] [--rebalance] [--vcbc]
+        [--engine dist|jax|jax-gpu|ref|oocache] [--hot 64] [--rebalance] \
+        [--vcbc]
+
+``--engine jax-gpu`` runs the accelerator fetch path: single-use DBQ
+gathers fuse into the intersect kernel (kernels/gather_intersect.py, see
+docs/KERNELS.md) so gathered row blocks never round-trip through HBM; on
+this CPU container pass ``--gather-intersect-impl interpret`` to run the
+Pallas kernel in interpret mode (otherwise it falls back to the unfused
+reference, still exact).
 
 ``--engine oocache`` runs the out-of-core fetch path: adjacency rows live
 in host-RAM shards, device memory holds only a bounded row cache
@@ -103,9 +111,13 @@ def main():
     ap.add_argument("--graph", choices=["er", "powerlaw"],
                     default="powerlaw")
     ap.add_argument("--engine",
-                    choices=["dist", "jax", "ref", "oocache", "sbenu",
-                             "sbenu-jax", "sbenu-dist"],
+                    choices=["dist", "jax", "jax-gpu", "ref", "oocache",
+                             "sbenu", "sbenu-jax", "sbenu-dist"],
                     default="dist")
+    ap.add_argument("--gather-intersect-impl", default="auto",
+                    help="jax-gpu: fused kernel impl (auto | pallas | "
+                         "interpret | ref/chunked/binary fallbacks); "
+                         "'interpret' runs the Pallas kernel on CPU")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (set before jax init)")
     ap.add_argument("--batch-per-shard", type=int, default=256)
@@ -163,6 +175,10 @@ def main():
         ex = make_executor("oocache", cache_frac=args.cache_frac,
                            hot=args.hot, prefetch=not args.no_prefetch)
         batch = args.batch_per_shard
+    elif args.engine == "jax-gpu":
+        ex = make_executor("jax-gpu",
+                           gather_intersect_impl=args.gather_intersect_impl)
+        batch = args.batch_per_shard
     else:
         ex = make_executor(args.engine)
         batch = args.batch_per_shard
@@ -199,6 +215,11 @@ def main():
                   f"{b / 1e6:8.2f}MB")
     elif args.engine == "ref":
         print(f"remote DBQ rows    : {st.extras['remote_queries']}")
+    elif args.engine in ("jax", "jax-gpu"):
+        lv = st.extras["level_sizes"]
+        print(f"fused fetch        : "
+              f"{'on' if st.extras['fused_fetch'] else 'off'}")
+        print(f"frontier rows/level: {lv.tolist()}")
 
 
 if __name__ == "__main__":

@@ -67,6 +67,49 @@ def test_ref_jax_conformance_unified_api(pname, gname):
 
 
 # --------------------------------------------------------------------------
+# jax-gpu (fused gather+intersect fetch path) == brute on every pattern x
+# graph, with the fused Pallas kernel forced on in interpret mode — the
+# only CI coverage the accelerator fetch path gets on the CPU container
+# (ISSUE 5 acceptance bar). The fused kernel really fires here: triangle /
+# square / clique4 / house all carry single-use DBQ operands
+# (engine_jax.classify_fusable_dbqs); path5 / cycle5 pin the all-
+# materialized degenerate case.
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pname", PATTERNS)
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_jax_gpu_fused_conformance(pname, gname, monkeypatch):
+    monkeypatch.setenv("REPRO_GATHER_INTERSECT_IMPL", "pallas-interpret")
+    monkeypatch.delenv("REPRO_FUSED_FETCH", raising=False)
+    g = GRAPHS[gname]
+    p = get_pattern(pname)
+    plan = generate_best_plan(p, g.stats())
+    st = make_executor("jax-gpu").run(plan, g, batch=32)
+    assert st.count == brute_count(pname, g), (pname, gname)
+    assert st.extras["fused_fetch"] is True
+
+
+def test_jax_gpu_fused_forced_overflow_match_set_exact():
+    """Lazy DBQ id columns must survive re-chunking: the adaptive driver's
+    split/escalate path with the fused kernel on neither drops nor
+    duplicates matches."""
+    p = get_pattern("clique4")
+    g = GRAPHS["er"]
+    plan = generate_best_plan(p, g.stats())
+    n_enu = plan_enu_count(plan)
+    ref = make_executor("ref").run(plan, g, batch=32, collect_matches=True)
+    gpu = make_executor("jax-gpu", gather_intersect_impl="interpret").run(
+        plan, g, batch=16, caps=[8] * n_enu, max_retries=12,
+        collect_matches=True)
+    got = {tuple(int(x) for x in row) for row in gpu.matches}
+    want = {tuple(int(x) for x in row) for row in ref.matches}
+    assert got == want
+    assert len(gpu.matches) == len(got)
+    assert gpu.chunks_split > 0
+
+
+# --------------------------------------------------------------------------
 # oocache == brute on every pattern x graph, with the device cache bounded
 # below 25% of the graph's rows (ISSUE 3 acceptance bar): the host-RAM
 # store + bounded device cache must be a drop-in engine, not an
@@ -542,8 +585,18 @@ def test_sbenu_dist_eight_way_stream_matrix():
 def test_intersect_pallas_interpret_env_override(monkeypatch):
     monkeypatch.setenv("REPRO_INTERSECT_IMPL", "pallas-interpret")
     from repro.core.engine_sbenu_jax import _resolve_intersect_impl
+    from repro.kernels.dispatch import resolve_impl
     assert _resolve_intersect_impl("auto") == "interpret"
     assert _resolve_intersect_impl("binary") == "binary"   # explicit wins
+    # the streaming resolver is a veneer over the shared dispatch registry
+    assert resolve_impl("intersect") == "interpret"
+    monkeypatch.delenv("REPRO_INTERSECT_IMPL")
+    assert _resolve_intersect_impl("auto") == "binary"     # CPU default
+    # the literal env value "auto" is a reset, not an override: the
+    # streaming engine must keep its binary-probe CPU default
+    monkeypatch.setenv("REPRO_INTERSECT_IMPL", "auto")
+    assert _resolve_intersect_impl("auto") == "binary"
+    monkeypatch.setenv("REPRO_INTERSECT_IMPL", "pallas-interpret")
 
     # static path (engine_jax -> kernels.ops dispatch)
     g = GRAPHS["er"]
